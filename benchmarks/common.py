@@ -1,0 +1,51 @@
+"""Shared benchmark utilities: timing, result collection, CSV emission."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                           "bench")
+
+
+def timeit(fn, *args, warmup: int = 1, reps: int = 3) -> float:
+    """Median wall seconds of fn(*args) with jax sync."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def save(name: str, payload) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+
+
+def emit(name: str, rows: list[dict]) -> None:
+    """Print a compact aligned table and persist JSON."""
+    if not rows:
+        print(f"[{name}] no rows")
+        return
+    cols = list(rows[0])
+    widths = {c: max(len(c), *(len(_fmt(r.get(c))) for r in rows))
+              for c in cols}
+    print(f"\n== {name} ==")
+    print("  ".join(c.ljust(widths[c]) for c in cols))
+    for r in rows:
+        print("  ".join(_fmt(r.get(c)).ljust(widths[c]) for c in cols))
+    save(name, rows)
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)

@@ -1,0 +1,43 @@
+"""Roofline table (deliverable g): per (arch × shape × mesh) the three terms
+derived from the compiled dry-run artifacts in experiments/dryrun/.
+
+Run ``python -m repro.launch.dryrun --all`` first; this benchmark only
+aggregates and prints (it never compiles)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def run() -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        d = json.load(open(path))
+        if not d.get("ok"):
+            rows.append({"arch": d.get("arch"), "shape": d.get("shape"),
+                         "mesh": d.get("mesh"), "ERROR": d.get("error")})
+            continue
+        dom = {"compute": d["t_compute"], "memory": d["t_memory"],
+               "collective": d["t_collective"]}[d["bottleneck"]]
+        total = max(d["t_compute"], d["t_memory"], d["t_collective"])
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+            "t_compute_s": d["t_compute"], "t_memory_s": d["t_memory"],
+            "t_collective_s": d["t_collective"],
+            "bottleneck": d["bottleneck"],
+            "roofline_frac": d["t_compute"] / total if total else 0.0,
+            "useful_flops_ratio": d["useful_ratio"],
+            "peak_GiB_per_dev": d["peak_memory_bytes"] / 2**30,
+        })
+    emit("roofline_report", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  table2_parent_sets   Table II  — all vs size-limited parent-set generation
+  table3_scoring       Table III — per-iteration order-scoring time vs n
+  table45_end2end      Tables IV/V — end-to-end STN/ALARM, all-vs-limited
+  roc_priors           Figs 9/10 — ROC with pairwise priors, 1k/10k iters
+  fault_injection      Fig 11  — noise-tolerance ROC sweep
+  kernel_scoring       Table III (GPU cols) — Pallas kernels vs oracle
+  roofline_report      §Roofline — aggregates experiments/dryrun/*.json
+
+``python -m benchmarks.run`` runs the quick profile (CPU-minutes);
+``--full`` uses the paper's iteration counts; ``--only <name>`` selects one.
+Results land in experiments/bench/*.json and are printed as tables.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale iteration counts (slow on CPU)")
+    args = ap.parse_args(argv)
+
+    from . import (baseline_sum, fault_injection, kernel_scoring, roc_priors,
+                   roofline_report, table2_parent_sets, table3_scoring,
+                   table45_end2end)
+
+    quick = not args.full
+    suites = {
+        "table2_parent_sets": lambda: table2_parent_sets.run(),
+        "table3_scoring": lambda: table3_scoring.run(
+            ns=(13, 15, 17, 20, 25, 30, 35, 40, 50, 60)),
+        "table45_end2end": lambda: table45_end2end.run(
+            iters=500 if quick else 10000),
+        "roc_priors": lambda: roc_priors.run(
+            iters_list=(2000,) if quick else (1000, 10000), chains=4),
+        "fault_injection": lambda: fault_injection.run(
+            iters=2000 if quick else 10000, chains=2),
+        "baseline_sum": lambda: baseline_sum.run(
+            iters=1000 if quick else 10000),
+        "kernel_scoring": lambda: kernel_scoring.run(),
+        "roofline_report": lambda: roofline_report.run(),
+    }
+    todo = [args.only] if args.only else list(suites)
+    t_all = time.time()
+    for name in todo:
+        t0 = time.time()
+        suites[name]()
+        print(f"[{name}] {time.time() - t0:.1f}s")
+    print(f"\nall benchmarks done in {time.time() - t_all:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

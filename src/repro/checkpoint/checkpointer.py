@@ -1,0 +1,150 @@
+"""Fault-tolerant checkpointing: device-agnostic (host numpy), atomic
+(write-to-temp + rename), asynchronous (background writer thread), elastic
+(restore re-shards onto whatever mesh is active — checkpoints carry no device
+topology). Auto-resume picks the latest complete step.
+
+Layout: <dir>/step_<n>/ with one .npy per flattened leaf + manifest.json
+(treedef + shapes + dtypes + user metadata). A checkpoint directory is only
+renamed into place after every array and the manifest are fully written, so a
+crash mid-write can never produce a readable-but-corrupt checkpoint.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "AsyncCheckpointer"]
+
+_MANIFEST = "manifest.json"
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree.flatten_with_path(tree)
+    names = ["leaf_" + "_".join(_path_str(k) for k in path)
+             for path, _ in flat]
+    return names, [v for _, v in flat], treedef
+
+
+def _path_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    if hasattr(k, "name"):
+        return str(k.name)
+    return str(k)
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    metadata: dict | None = None) -> str:
+    """Blocking save. Returns the final checkpoint path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:010d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    names, leaves, _ = _flatten_with_paths(tree)
+    dtypes = []
+    for name, leaf in zip(names, leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        dtypes.append(str(leaf.dtype))
+        np.save(os.path.join(tmp, name + ".npy"),
+                arr.astype(np.float32) if arr.dtype == np.dtype("bfloat16")
+                else arr)
+    manifest = {"step": step, "names": names, "dtypes": dtypes,
+                "metadata": metadata or {}}
+    with open(os.path.join(tmp, _MANIFEST), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)           # atomic publish
+    return final
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, name, _MANIFEST)):
+                steps.append(int(name[5:]))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, tree_like: Any, step: int | None = None,
+                       shardings: Any = None) -> tuple[Any, dict]:
+    """Restore into the structure of `tree_like` (values ignored). If
+    `shardings` is given (pytree of NamedSharding), leaves are placed sharded —
+    this is the elastic path: any mesh works, the checkpoint is topology-free.
+    Returns (tree, metadata)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    path = os.path.join(directory, f"step_{step:010d}")
+    with open(os.path.join(path, _MANIFEST)) as f:
+        manifest = json.load(f)
+    names, _, treedef = _flatten_with_paths(tree_like)
+    if names != manifest["names"]:
+        raise ValueError("checkpoint structure mismatch: "
+                         f"{set(manifest['names']) ^ set(names)}")
+    sh_leaves = (jax.tree.leaves(shardings) if shardings is not None
+                 else [None] * len(names))
+    leaves = []
+    for name, dt, sh in zip(names, manifest["dtypes"], sh_leaves):
+        arr = np.load(os.path.join(path, name + ".npy"))
+        val = jax.numpy.asarray(arr, dtype=dt)
+        if sh is not None:
+            val = jax.device_put(val, sh)
+        leaves.append(val)
+    return treedef.unflatten(leaves), manifest["metadata"]
+
+
+class AsyncCheckpointer:
+    """Background writer: save() returns immediately; wait() joins. Keeps at
+    most `keep` checkpoints (older ones pruned after a successful write)."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self.last_error: Exception | None = None
+
+    def save(self, step: int, tree: Any, metadata: dict | None = None) -> None:
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, host_tree, metadata)
+                self._prune()
+            except Exception as e:          # surfaced on next wait()
+                self.last_error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.last_error is not None:
+            err, self.last_error = self.last_error, None
+            raise err
+
+    def _prune(self) -> None:
+        steps = sorted(s for s in (
+            int(n[5:]) for n in os.listdir(self.directory)
+            if n.startswith("step_") and not n.endswith(".tmp")))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:010d}"),
+                          ignore_errors=True)

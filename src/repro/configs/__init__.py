@@ -1,0 +1,45 @@
+"""Config registry: ``--arch <id>`` resolution."""
+from __future__ import annotations
+
+import importlib
+
+from .base import SHAPES, ModelConfig, ShapeConfig
+
+_ARCH_MODULES = {
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "command-r-plus-104b": "command_r_plus_104b",
+    "yi-34b": "yi_34b",
+    "llama3-405b": "llama3_405b",
+    "granite-20b": "granite_20b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "arctic-480b": "arctic_480b",
+    "chameleon-34b": "chameleon_34b",
+    "rwkv6-7b": "rwkv6_7b",
+}
+
+ARCH_IDS = list(_ARCH_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; available: {ARCH_IDS}")
+    mod = importlib.import_module(f".{_ARCH_MODULES[arch]}", __package__)
+    return mod.CONFIG
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def cells(arch: str) -> list[str]:
+    """The shape cells defined for an arch (long_500k only for sub-quadratic)."""
+    cfg = get_config(arch)
+    out = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.sub_quadratic:
+        out.append("long_500k")
+    return out
+
+
+__all__ = ["ARCH_IDS", "SHAPES", "ModelConfig", "ShapeConfig", "cells",
+           "get_config", "get_shape"]

@@ -1,0 +1,22 @@
+"""arctic-480b [moe] — 128 experts top-2 + dense residual MLP.
+
+35L d_model=7168 56H (GQA kv=8) d_ff=4864 vocab=32000, MoE 128e top-2.
+[hf:Snowflake/snowflake-arctic-base; hf]
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    family="moe",
+    n_layers=35,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=4864,
+    vocab=32000,
+    head_dim=128,
+    n_experts=128,
+    experts_top_k=2,
+    moe_dense_residual=True,
+    source="hf:Snowflake/snowflake-arctic-base; hf",
+)

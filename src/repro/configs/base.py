@@ -1,0 +1,183 @@
+"""Config system: architecture configs + input-shape cells.
+
+Every assigned architecture is a `ModelConfig`; the four LM shape cells are
+`ShapeConfig`s. `reduced()` yields the family-preserving small config used by
+CPU smoke tests (the full config is exercised only via the dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field, replace
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "pad_to"]
+
+
+def pad_to(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | hybrid | ssm | encdec
+    n_layers: int
+    d_model: int
+    n_heads: int                 # query heads (0 for attention-free)
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0            # 0 -> d_model // n_heads
+
+    # encoder-decoder (seamless)
+    enc_layers: int = 0
+    enc_seq_divisor: int = 4     # encoder frames = seq // divisor (stub frontend)
+
+    # MoE
+    n_experts: int = 0
+    experts_top_k: int = 0
+    moe_dense_residual: bool = False   # arctic: dense MLP in parallel with MoE
+    capacity_factor: float = 1.25
+
+    # hybrid (recurrentgemma): repeating block pattern, e.g. ("rglru","rglru","attn")
+    block_pattern: tuple[str, ...] = ()
+    window: int = 0              # local-attention window (0 = global)
+    conv_width: int = 4          # RG-LRU temporal conv taps
+    lru_dim: int = 0             # RG-LRU recurrence width (0 -> d_model)
+
+    # ssm (rwkv6)
+    rwkv_head_dim: int = 64
+
+    # numerics / training
+    param_dtype: str = "bfloat16"
+    norm_eps: float = 1e-5
+    rope_theta: float = 500000.0
+    tie_embeddings: bool = False
+    use_bias: bool = False
+    remat: bool = True
+
+    # notes for DESIGN/roofline
+    source: str = ""
+
+    # -------------------------------------------------- derived properties
+    @property
+    def hd(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch serve 500k-token contexts? (SSM state / bounded window)"""
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def has_decoder(self) -> bool:
+        return True  # every assigned arch has an autoregressive decoder
+
+    def padded_heads(self, tp: int) -> int:
+        return pad_to(self.n_heads, tp) if self.n_heads else 0
+
+    def padded_vocab(self, tp: int) -> int:
+        return pad_to(self.vocab, 128 * tp)
+
+    def padded_experts(self, tp: int) -> int:
+        return pad_to(self.n_experts, tp) if self.n_experts else 0
+
+    def layer_pattern(self) -> tuple[str, ...]:
+        return self.block_pattern if self.block_pattern else ("attn",)
+
+    # -------------------------------------------------- parameter counting
+    def param_count(self) -> tuple[int, int]:
+        """(total, active-per-token) parameter counts — used for 6·N·D model
+        FLOPs in the roofline (MoE uses the active count)."""
+        d, ff, v = self.d_model, self.d_ff, self.vocab
+        hq, hkv, hd = max(self.n_heads, 1), max(self.n_kv_heads, 1), self.hd
+
+        def attn_p():
+            return d * hq * hd + 2 * d * hkv * hd + hq * hd * d
+
+        def mlp_p(f):
+            return 3 * d * f      # SwiGLU (gate, up, down)
+
+        def rglru_p():
+            w = self.lru_dim or d
+            return 2 * d * w + w * d + self.conv_width * w + 2 * w  # in/gate, out, conv, lambda
+
+        def rwkv_p():
+            return 4 * d * d + d * d + 6 * d * 32 * 2 + mlp_p(ff) // 3 * 0  # r,k,v,g,o + lora-ish mixers
+
+        total = active = 0
+        pattern = self.layer_pattern()
+        for li in range(self.n_layers):
+            kind = pattern[li % len(pattern)]
+            if self.family == "ssm":
+                lp = rwkv_p() + 3 * d * ff
+                total += lp; active += lp
+                continue
+            if kind == "attn":
+                total += attn_p(); active += attn_p()
+            elif kind == "rglru":
+                total += rglru_p(); active += rglru_p()
+            if self.family == "moe":
+                e = mlp_p(ff)
+                total += self.n_experts * e
+                active += self.experts_top_k * e
+                if self.moe_dense_residual:
+                    total += mlp_p(ff); active += mlp_p(ff)
+            else:
+                total += mlp_p(ff); active += mlp_p(ff)
+        enc = 0
+        if self.enc_layers:
+            enc = self.enc_layers * (attn_p() + mlp_p(ff))
+            # decoder cross-attention
+            total += self.n_layers * attn_p(); active += self.n_layers * attn_p()
+        total += enc; active += enc
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        total += emb; active += emb
+        return total, active
+
+    # -------------------------------------------------- reduced smoke config
+    def reduced(self) -> "ModelConfig":
+        """Family-preserving tiny variant for CPU smoke tests."""
+        pat = self.block_pattern
+        n_layers = (2 * len(pat) + (2 if self.name.startswith("recurrentgemma")
+                                    else 0)) if pat else 2
+        return replace(
+            self,
+            n_layers=n_layers,
+            enc_layers=min(self.enc_layers, 2),
+            d_model=128,
+            n_heads=min(self.n_heads, 4) if self.n_heads else 0,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads else 0,
+            head_dim=32 if self.n_heads else 0,
+            d_ff=256 if self.family != "moe" else 64,
+            vocab=512,
+            n_experts=min(self.n_experts, 8),
+            experts_top_k=min(self.experts_top_k, 2),
+            window=min(self.window, 64) if self.window else 0,
+            lru_dim=128 if self.lru_dim else 0,
+            rwkv_head_dim=32,
+            param_dtype="float32",
+            remat=False,
+        )
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str        # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}

@@ -1,0 +1,20 @@
+"""chameleon-34b [vlm] — early-fusion VQ image tokens; backbone only.
+
+48L d_model=8192 64H (GQA kv=8) d_ff=22016 vocab=65536.
+[arXiv:2405.09818; unverified]. VQ image tokens are ordinary vocabulary ids,
+so the backbone is a decoder-only LM; the image tokenizer frontend is a stub.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chameleon-34b",
+    family="dense",
+    n_layers=48,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=22016,
+    vocab=65536,
+    head_dim=128,
+    source="arXiv:2405.09818; unverified",
+)

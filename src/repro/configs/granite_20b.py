@@ -1,0 +1,18 @@
+"""granite-20b [dense] — llama-arch MQA (kv=1), code model.
+
+52L d_model=6144 48H (GQA kv=1) d_ff=24576 vocab=49152. [arXiv:2405.04324; hf]
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-20b",
+    family="dense",
+    n_layers=52,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=1,
+    d_ff=24576,
+    vocab=49152,
+    head_dim=128,
+    source="arXiv:2405.04324; hf",
+)

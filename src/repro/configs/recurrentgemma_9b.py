@@ -1,0 +1,25 @@
+"""recurrentgemma-9b [hybrid] — Griffin: RG-LRU + local attention, 1:2.
+
+38L d_model=4096 16H (GQA kv=1) d_ff=12288 vocab=256000, window 2048.
+Pattern: (rglru, rglru, attn) repeating. [arXiv:2402.19427; unverified]
+Sub-quadratic: runs long_500k (bounded window + O(1) recurrent state).
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    n_layers=38,
+    d_model=4096,
+    n_heads=16,
+    n_kv_heads=1,
+    d_ff=12288,
+    vocab=256000,
+    head_dim=256,
+    block_pattern=("rglru", "rglru", "attn"),
+    window=2048,
+    conv_width=4,
+    lru_dim=4096,
+    rope_theta=10000.0,
+    source="arXiv:2402.19427; unverified",
+)

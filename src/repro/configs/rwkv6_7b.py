@@ -1,0 +1,19 @@
+"""rwkv6-7b [ssm] — Finch: data-dependent decay, attention-free.
+
+32L d_model=4096 d_ff=14336 vocab=65536, head size 64. [arXiv:2404.05892; hf]
+Sub-quadratic: runs long_500k (O(1) recurrent state per layer).
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b",
+    family="ssm",
+    n_layers=32,
+    d_model=4096,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=14336,
+    vocab=65536,
+    rwkv_head_dim=64,
+    source="arXiv:2404.05892; hf",
+)

@@ -1,0 +1,22 @@
+"""seamless-m4t-large-v2 [audio] — enc-dec multimodal backbone.
+
+24L d_model=1024 16H (GQA kv=16) d_ff=8192 vocab=256206.
+[arXiv:2308.11596; hf]. Modality frontend is a stub: input_specs() provides
+precomputed audio-frame embeddings for the encoder.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="encdec",
+    n_layers=24,          # decoder layers
+    enc_layers=24,        # encoder layers
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=8192,
+    vocab=256206,
+    head_dim=64,
+    rope_theta=10000.0,
+    source="arXiv:2308.11596; hf",
+)

@@ -1,0 +1,168 @@
+"""Combinatorial machinery for parent-set enumeration (paper §V-B, Algorithm 2).
+
+The paper indexes all subsets of at most ``s`` elements out of ``n`` candidates so
+that (a) a GPU thread can *unrank* an index into its subset arithmetically
+(Algorithm 2), and (b) a materialized parent-set table (PST) can replace the
+arithmetic with a table read.  We implement both:
+
+* :func:`unrank_combination` — faithful, non-recursive Algorithm 2 (lexicographic
+  k-combinations of ``n`` elements).
+* :func:`rank_combination` — the inverse bijection.  This is the TPU-native
+  replacement for the paper's *hash table*: instead of hashing (node, parent-set)
+  into a chained table, the rank IS the address into a dense ``(n, S)`` score
+  table.  O(s) integer math, no pointer chasing, gatherable.
+* :func:`build_pst` — the parent-set table, size-ascending then lexicographic.
+
+Layout notes
+------------
+Parent sets are subsets of the ``n-1`` *candidate* indices ``{0..n-2}`` shared by
+every node; candidate ``c`` of node ``i`` refers to node ``c + (c >= i)``.  PST rows
+are padded to width ``s`` with ``-1``.
+"""
+from __future__ import annotations
+
+import math
+from functools import lru_cache
+
+import numpy as np
+
+__all__ = [
+    "n_parent_sets",
+    "size_offsets",
+    "binom_table",
+    "unrank_combination",
+    "rank_combination",
+    "build_pst",
+    "rank_parent_set",
+    "candidates_to_nodes",
+    "nodes_to_candidates",
+]
+
+
+def n_parent_sets(n_candidates: int, s: int) -> int:
+    """S = sum_{j=0}^{s} C(n_candidates, j) — paper §III-B."""
+    return sum(math.comb(n_candidates, j) for j in range(s + 1))
+
+
+def size_offsets(n_candidates: int, s: int) -> np.ndarray:
+    """Start offset of each size-k block in the PST, k = 0..s (+ total sentinel)."""
+    sizes = [math.comb(n_candidates, j) for j in range(s + 1)]
+    return np.concatenate([[0], np.cumsum(sizes)]).astype(np.int64)
+
+
+@lru_cache(maxsize=None)
+def binom_table(n_max: int, k_max: int) -> np.ndarray:
+    """C(n, k) for 0 <= n <= n_max, 0 <= k <= k_max (int64, exact for our sizes)."""
+    t = np.zeros((n_max + 1, k_max + 1), dtype=np.int64)
+    t[:, 0] = 1
+    for n in range(1, n_max + 1):
+        for k in range(1, k_max + 1):
+            t[n, k] = t[n - 1, k - 1] + t[n - 1, k]
+    return t
+
+
+def unrank_combination(n: int, k: int, l: int) -> np.ndarray:
+    """Paper Algorithm 2: the l-th (0-based) k-combination of {0..n-1} in
+    lexicographic order, non-recursive.
+
+    The paper states it for 1-based elements and 1-based rank; we use 0-based on
+    both ends (the bijection is identical up to the shift).
+    """
+    if not (0 <= l < math.comb(n, k)):
+        raise ValueError(f"rank {l} out of range for C({n},{k})")
+    comb = np.empty(k, dtype=np.int64)
+    low = -1  # last chosen element (0-based); paper's `low` is the 1-based analogue
+    for pos in range(k):
+        remaining = k - pos
+        # find the smallest next element a > low such that the number of
+        # combinations starting with a covers rank l
+        s = 0
+        n_rest = n - (low + 1)  # candidates remaining
+        acc = 0
+        while True:
+            s += 1
+            c = math.comb(n_rest - s, remaining - 1)
+            if acc + c > l:
+                break
+            acc += c
+        comb[pos] = low + s
+        l -= acc
+        low = comb[pos]
+    return comb
+
+
+def rank_combination(n: int, comb: np.ndarray) -> int:
+    """Inverse of :func:`unrank_combination` (lexicographic rank, 0-based)."""
+    comb = np.asarray(comb, dtype=np.int64)
+    k = len(comb)
+    rank = 0
+    low = -1
+    for pos, a in enumerate(comb):
+        remaining = k - pos
+        n_rest = n - (low + 1)
+        for step in range(1, int(a) - low):
+            rank += math.comb(n_rest - step, remaining - 1)
+        low = int(a)
+    return rank
+
+
+def build_pst(n_candidates: int, s: int) -> tuple[np.ndarray, np.ndarray]:
+    """Parent-set table: (S, s) int32 padded with -1, and (S,) int32 sizes.
+
+    Order: size-ascending blocks (empty set first), lexicographic within a block.
+    (The paper lists size-4-first; only the block order differs — see DESIGN.md §8.)
+    """
+    rows = []
+    sizes = []
+    for k in range(s + 1):
+        if k == 0:
+            rows.append(np.full((1, s), -1, dtype=np.int32))
+            sizes.append(np.zeros(1, dtype=np.int32))
+            continue
+        block = np.empty((math.comb(n_candidates, k), s), dtype=np.int32)
+        block[:] = -1
+        # enumerate lexicographically without per-row unranking (O(S) total)
+        c = np.arange(k, dtype=np.int64)
+        idx = 0
+        while True:
+            block[idx, :k] = c
+            idx += 1
+            # next lexicographic combination
+            j = k - 1
+            while j >= 0 and c[j] == n_candidates - k + j:
+                j -= 1
+            if j < 0:
+                break
+            c[j] += 1
+            for jj in range(j + 1, k):
+                c[jj] = c[jj - 1] + 1
+        rows.append(block)
+        sizes.append(np.full(idx, k, dtype=np.int32))
+    return np.concatenate(rows, axis=0), np.concatenate(sizes)
+
+
+def rank_parent_set(n_candidates: int, s: int, parents: np.ndarray) -> int:
+    """Global PST index of a candidate-index parent set (any order). The
+    hash-table-equivalent lookup: table[node, rank_parent_set(...)] == ls(node, π)."""
+    parents = np.sort(np.asarray(parents, dtype=np.int64))
+    k = len(parents)
+    if k > s:
+        raise ValueError(f"parent set of size {k} exceeds limit s={s}")
+    off = size_offsets(n_candidates, s)
+    return int(off[k] + (rank_combination(n_candidates, parents) if k else 0))
+
+
+def candidates_to_nodes(cands: np.ndarray, node: int) -> np.ndarray:
+    """Map candidate indices {0..n-2} to node ids {0..n-1}\\{node}. -1 padding maps to -1."""
+    cands = np.asarray(cands)
+    out = cands + (cands >= node)
+    return np.where(cands < 0, -1, out)
+
+
+def nodes_to_candidates(nodes: np.ndarray, node: int) -> np.ndarray:
+    """Inverse of :func:`candidates_to_nodes`."""
+    nodes = np.asarray(nodes)
+    if np.any(nodes == node):
+        raise ValueError("a node cannot be its own parent")
+    out = nodes - (nodes > node)
+    return np.where(nodes < 0, -1, out)

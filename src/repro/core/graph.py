@@ -1,0 +1,70 @@
+"""DAG utilities: random ground-truth networks, CPTs, adjacency recovery."""
+from __future__ import annotations
+
+import numpy as np
+
+from .combinatorics import candidates_to_nodes
+
+__all__ = ["random_dag", "random_cpts", "adjacency_from_best",
+           "parents_list_from_adjacency", "topological_order"]
+
+
+def random_dag(rng: np.random.Generator, n: int, max_parents: int,
+               edge_prob: float = 0.25) -> np.ndarray:
+    """Random DAG adjacency (adj[m, i] = 1 ⇔ edge m → i) with ≤ max_parents."""
+    order = rng.permutation(n)
+    adj = np.zeros((n, n), dtype=np.int8)
+    for pos in range(1, n):
+        i = order[pos]
+        preds = order[:pos]
+        k = min(len(preds), max_parents)
+        npar = rng.binomial(k, edge_prob) if k else 0
+        if npar:
+            for m in rng.choice(preds, size=npar, replace=False):
+                adj[m, i] = 1
+    return adj
+
+
+def random_cpts(rng: np.random.Generator, adj: np.ndarray, q: int,
+                concentration: float = 0.5) -> list[np.ndarray]:
+    """Dirichlet CPTs: cpts[i] has shape (q^{|parents|}, q). Low concentration
+    gives sharp (informative) conditionals."""
+    n = adj.shape[0]
+    cpts = []
+    for i in range(n):
+        r = q ** int(adj[:, i].sum())
+        cpts.append(rng.dirichlet(np.full(q, concentration), size=r))
+    return cpts
+
+
+def topological_order(adj: np.ndarray) -> np.ndarray:
+    """Kahn's algorithm; raises on cycles."""
+    n = adj.shape[0]
+    indeg = adj.sum(axis=0).astype(int).copy()
+    queue = [i for i in range(n) if indeg[i] == 0]
+    out = []
+    while queue:
+        v = queue.pop()
+        out.append(v)
+        for w in np.nonzero(adj[v])[0]:
+            indeg[w] -= 1
+            if indeg[w] == 0:
+                queue.append(int(w))
+    if len(out) != n:
+        raise ValueError("graph has a cycle")
+    return np.asarray(out)
+
+
+def parents_list_from_adjacency(adj: np.ndarray) -> list[np.ndarray]:
+    return [np.nonzero(adj[:, i])[0] for i in range(adj.shape[0])]
+
+
+def adjacency_from_best(best_idx: np.ndarray, pst: np.ndarray) -> np.ndarray:
+    """Recover adjacency from per-node best PST indices (the learned graph)."""
+    n = len(best_idx)
+    adj = np.zeros((n, n), dtype=np.int8)
+    for i in range(n):
+        cands = pst[int(best_idx[i])]
+        for m in candidates_to_nodes(cands[cands >= 0], i):
+            adj[int(m), i] = 1
+    return adj

@@ -1,0 +1,103 @@
+"""Order-space Metropolis–Hastings MCMC (paper §III, Algorithm 1).
+
+Random walk over topological orders: propose by swapping two random nodes,
+accept with probability min(1, P(≺_new)/P(≺)) — in log space,
+``log u < score(≺_new) − score(≺)``. The best graph (per-node argmax parent
+sets) is produced by the scorer itself on every iteration, so the global best
+graph is tracked for free — no postprocessing (paper §III-B).
+
+Everything is a `lax.scan` over iterations; chains are vmapped (and sharded
+over the `data`/`pod` mesh axes by launch/bn_learn.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ChainState", "init_chain", "mcmc_run", "mcmc_run_chains", "exchange_best"]
+
+ScoreFn = Callable[[jnp.ndarray], tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]]
+# pos (n,) -> (score, best_idx (n,), best_ls (n,))
+
+
+class ChainState(NamedTuple):
+    key: jax.Array
+    pos: jax.Array          # (n,) int32 — pos[v] = position of node v in ≺
+    score: jax.Array        # f32 — score of current order
+    cur_idx: jax.Array      # (n,) int32 — best parent-set idx under current order
+    best_score: jax.Array   # f32 — best graph score seen so far
+    best_idx: jax.Array     # (n,) int32 — its parent sets
+    best_pos: jax.Array     # (n,) int32 — its order
+    accepts: jax.Array      # int32
+
+
+def init_chain(key: jax.Array, n: int, score_fn: ScoreFn) -> ChainState:
+    key, sub = jax.random.split(key)
+    pos = jax.random.permutation(sub, n).astype(jnp.int32)
+    score, idx, _ = score_fn(pos)
+    return ChainState(key, pos, score, idx, score, idx, pos, jnp.int32(0))
+
+
+def _propose_swap(key: jax.Array, pos: jax.Array) -> jax.Array:
+    """Swap the positions of two distinct random nodes (paper §III-C)."""
+    n = pos.shape[0]
+    ka, kb = jax.random.split(key)
+    a = jax.random.randint(ka, (), 0, n)
+    b = jax.random.randint(kb, (), 0, n - 1)
+    b = b + (b >= a)  # distinct
+    pa, pb = pos[a], pos[b]
+    return pos.at[a].set(pb).at[b].set(pa)
+
+
+def mcmc_step(state: ChainState, score_fn: ScoreFn) -> ChainState:
+    key, k_prop, k_u = jax.random.split(state.key, 3)
+    new_pos = _propose_swap(k_prop, state.pos)
+    new_score, new_idx, _ = score_fn(new_pos)
+    log_u = jnp.log(jax.random.uniform(k_u, (), minval=1e-38))
+    accept = log_u < (new_score - state.score)
+
+    pos = jnp.where(accept, new_pos, state.pos)
+    score = jnp.where(accept, new_score, state.score)
+    cur_idx = jnp.where(accept, new_idx, state.cur_idx)
+
+    better = accept & (new_score > state.best_score)
+    return ChainState(
+        key=key, pos=pos, score=score, cur_idx=cur_idx,
+        best_score=jnp.where(better, new_score, state.best_score),
+        best_idx=jnp.where(better, new_idx, state.best_idx),
+        best_pos=jnp.where(better, new_pos, state.best_pos),
+        accepts=state.accepts + accept.astype(jnp.int32),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("n", "score_fn", "iters", "trace"))
+def mcmc_run(key: jax.Array, n: int, score_fn: ScoreFn, iters: int,
+             trace: bool = False):
+    """Run one chain for `iters` iterations. Returns (final_state, score_trace)."""
+    state = init_chain(key, n, score_fn)
+
+    def body(st, _):
+        st = mcmc_step(st, score_fn)
+        return st, (st.score if trace else None)
+
+    state, tr = jax.lax.scan(body, state, None, length=iters)
+    return state, tr
+
+
+def mcmc_run_chains(key: jax.Array, n_chains: int, n: int, score_fn: ScoreFn,
+                    iters: int):
+    """vmapped independent chains (DP axis). Returns stacked final states."""
+    keys = jax.random.split(key, n_chains)
+    run = functools.partial(mcmc_run, n=n, score_fn=score_fn, iters=iters)
+    states, _ = jax.vmap(lambda k: run(k))(keys)
+    return states
+
+
+def exchange_best(states: ChainState) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Cross-chain best-graph reduction (max + index-resolved argmax — the same
+    reduction pattern as the scoring kernel, one level up)."""
+    w = jnp.argmax(states.best_score)
+    return states.best_score[w], states.best_idx[w], states.best_pos[w]

@@ -1,0 +1,29 @@
+"""Accuracy metrics: ROC points (paper §VI, Figs. 9–11)."""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["roc_point", "structural_hamming"]
+
+
+def roc_point(learned: np.ndarray, truth: np.ndarray) -> tuple[float, float]:
+    """(FP rate, TP rate) of a learned adjacency vs ground truth.
+
+    TP rate = recovered true edges / true edges;
+    FP rate = spurious edges / true non-edges (diagonal excluded).
+    """
+    n = truth.shape[0]
+    off = ~np.eye(n, dtype=bool)
+    t = truth.astype(bool) & off
+    l = learned.astype(bool) & off
+    pos = t.sum()
+    neg = off.sum() - pos
+    tp = (l & t).sum()
+    fp = (l & ~t).sum()
+    return (float(fp) / max(neg, 1), float(tp) / max(pos, 1))
+
+
+def structural_hamming(learned: np.ndarray, truth: np.ndarray) -> int:
+    n = truth.shape[0]
+    off = ~np.eye(n, dtype=bool)
+    return int(((learned.astype(bool) ^ truth.astype(bool)) & off).sum())

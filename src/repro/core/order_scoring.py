@@ -1,0 +1,155 @@
+"""Order scoring (paper Eq. 6): score(≺) = Σ_i max_{π_i consistent with ≺} ls(i, π_i).
+
+This is the hot loop the paper puts on the GPU. Three interchangeable paths:
+
+* :func:`score_order_ref` — pure-jnp oracle (chunked over S);
+* kernels/order_score — the Pallas TPU kernel (same contract);
+* :func:`score_order_sharded` — the multi-device version: the parent-set axis is
+  sharded over the ``model`` mesh axis and reduced with pmax + index-resolved
+  pmin — the paper's thread→block→global reduction tree promoted to
+  lane→block→device→ICI (DESIGN.md §2).
+
+Contract: given table (n, S), pst (S, s), psizes (S,), pos (n,) (pos[v] =
+position of node v in ≺), return (total_score, best_idx (n,), best_ls (n,))
+where best_idx[i] is the PST index of the argmax parent set — i.e. the best
+graph consistent with the order, produced *during* scoring (no postprocessing,
+paper §III-B).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = jnp.float32(-3.0e38)
+
+__all__ = ["consistent_mask", "score_order_ref", "score_order_chunked",
+           "score_order_blocked", "score_order_sum", "NEG_INF"]
+
+
+def consistent_mask(pst: jnp.ndarray, node: jnp.ndarray,
+                    pos: jnp.ndarray) -> jnp.ndarray:
+    """(C,) bool — parent set consistent with order: all parents precede node.
+
+    pst: (C, s) candidate indices (-1 pad); node: scalar; pos: (n,).
+    """
+    pnode = pst + (pst >= node)                       # (C, s) node ids
+    ppos = pos[jnp.clip(pnode, 0)]                    # (C, s)
+    ok = jnp.where(pst < 0, True, ppos < pos[node])
+    return jnp.all(ok, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def score_order_ref(table: jnp.ndarray, pst: jnp.ndarray,
+                    pos: jnp.ndarray):
+    """Unchunked oracle. table: (n, S); pst: (S, s); pos: (n,)."""
+    n, S = table.shape
+
+    def per_node(i, row):
+        mask = consistent_mask(pst, i, pos)
+        masked = jnp.where(mask, row, NEG_INF)
+        idx = jnp.argmax(masked)
+        return masked[idx], idx
+
+    best_ls, best_idx = jax.vmap(per_node)(jnp.arange(n), table)
+    return best_ls.sum(), best_idx.astype(jnp.int32), best_ls
+
+
+@functools.partial(jax.jit, static_argnames=())
+def score_order_sum(table: jnp.ndarray, pst: jnp.ndarray, pos: jnp.ndarray):
+    """The BASELINE the paper argues against (§III-B): Linderman et al.'s
+    sum-based order score  Σ_i log Σ_{π consistent} exp ls(i, π).
+
+    Needs exp/log per parent set (the paper's first objection), does NOT
+    produce the best graph (a postprocessing pass — one max-scorer call — is
+    required, the paper's third objection), and the best graph may not be
+    consistent with the best order (second objection; demonstrated in
+    benchmarks/baseline_sum.py). Same contract as score_order_ref, but
+    best_idx/best_ls come from the embedded max pass (the postprocessing)."""
+    n, S = table.shape
+
+    def per_node(i, row):
+        mask = consistent_mask(pst, i, pos)
+        masked = jnp.where(mask, row, NEG_INF)
+        total = jax.scipy.special.logsumexp(masked)
+        idx = jnp.argmax(masked)
+        return total, masked[idx], idx
+
+    tot, best_ls, best_idx = jax.vmap(per_node)(jnp.arange(n), table)
+    return tot.sum(), best_idx.astype(jnp.int32), best_ls
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def score_order_blocked(table: jnp.ndarray, pst: jnp.ndarray,
+                        pos: jnp.ndarray, *, block: int = 4096):
+    """Same contract as score_order_chunked, restructured block-OUTER /
+    node-INNER (§Perf hillclimb #3): the PST block is loaded once and the
+    consistency masks for ALL n nodes are computed against it while it is
+    hot, so HBM traffic drops from n·(S·4 + S·s·4) to n·S·4 + S·s·4 —
+    ~(s+1)/(1+s/n)× less. This is exactly the Pallas kernel's revisiting-grid
+    order (grid (S/blk, n), PST block index depends on dim 0 only)."""
+    n, S = table.shape
+    assert S % block == 0, "pad S to a multiple of block"
+    nb = S // block
+    nodes = jnp.arange(n)
+    # Candidate c maps to node c + (c >= i), so a parent's position is either
+    # pos[c] or pos[c+1]: gather BOTH once per block (node-independent) and
+    # pick per node with an elementwise select — no per-(node, block) gather.
+    pos_ext = jnp.concatenate([pos, jnp.zeros((1,), pos.dtype)])
+
+    def body(carry, b):
+        bmax, barg = carry                                # (n,), (n,)
+        tbl = jax.lax.dynamic_slice_in_dim(table, b * block, block, axis=1)
+        psl = jax.lax.dynamic_slice_in_dim(pst, b * block, block, axis=0)
+        safe = jnp.clip(psl, 0)
+        ppos_lo = pos_ext[safe]                           # (blk, s) c -> c
+        ppos_hi = pos_ext[jnp.minimum(safe + 1, n)]       # (blk, s) c -> c+1
+
+        def per_node(i, row):
+            ppos = jnp.where(psl >= i, ppos_hi, ppos_lo)
+            ok = jnp.where(psl < 0, True, ppos < pos[i])
+            masked = jnp.where(jnp.all(ok, axis=-1), row, NEG_INF)
+            a = jnp.argmax(masked)
+            return masked[a], a
+
+        v, a = jax.vmap(per_node)(nodes, tbl)             # (n,), (n,)
+        better = v > bmax
+        return (jnp.where(better, v, bmax),
+                jnp.where(better, a + b * block, barg)), None
+
+    (best_ls, best_idx), _ = jax.lax.scan(
+        body, (jnp.full((n,), NEG_INF), jnp.zeros((n,), jnp.int32)),
+        jnp.arange(nb))
+    return best_ls.sum(), best_idx.astype(jnp.int32), best_ls
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def score_order_chunked(table: jnp.ndarray, pst: jnp.ndarray,
+                        pos: jnp.ndarray, *, block: int = 4096):
+    """Same contract, streaming S in blocks (bounded working set; mirrors the
+    kernel's VMEM tiling). S must be padded to a multiple of `block` by the
+    caller (pad table with NEG_INF)."""
+    n, S = table.shape
+    assert S % block == 0, "pad S to a multiple of block"
+    nb = S // block
+
+    def per_node(i, row):
+        def body(carry, b):
+            bmax, barg = carry
+            sl = jax.lax.dynamic_slice_in_dim(row, b * block, block)
+            psl = jax.lax.dynamic_slice_in_dim(pst, b * block, block, axis=0)
+            mask = consistent_mask(psl, i, pos)
+            masked = jnp.where(mask, sl, NEG_INF)
+            a = jnp.argmax(masked)
+            v = masked[a]
+            better = v > bmax
+            return (jnp.where(better, v, bmax),
+                    jnp.where(better, a + b * block, barg)), None
+
+        (bmax, barg), _ = jax.lax.scan(body, (NEG_INF, jnp.int32(0)),
+                                       jnp.arange(nb))
+        return bmax, barg
+
+    best_ls, best_idx = jax.vmap(per_node)(jnp.arange(n), table)
+    return best_ls.sum(), best_idx.astype(jnp.int32), best_ls

@@ -1,0 +1,63 @@
+"""Pairwise prior component (paper §IV).
+
+Interface matrix ``R ∈ [0,1]^{n×n}``: R[i, m] is the user's confidence in the
+existence of an edge m → i (0.5 = no bias). The pairwise prior function
+
+    PPF(i, m) = 100 · (R[i, m] − 0.5)³            (paper Eq. 10, log10 units)
+
+is added to ls(i, π) for every m ∈ π (Eq. 9). We work in natural log, so the
+stored value is ``PPF · ln 10`` — the paper's "±10 log10 units at R→0/1"
+semantics is preserved exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+LN10 = float(np.log(10.0))
+
+__all__ = ["ppf", "ppf_ln", "prior_chunk", "prior_table", "make_prior_matrix"]
+
+
+def ppf(R: jnp.ndarray) -> jnp.ndarray:
+    """Paper Eq. 10 (log10 units)."""
+    return 100.0 * (R - 0.5) ** 3
+
+
+def ppf_ln(R: jnp.ndarray) -> jnp.ndarray:
+    """PPF converted to natural-log units (internal score space)."""
+    return ppf(R) * LN10
+
+
+def prior_chunk(R: jnp.ndarray, node: int | jnp.ndarray,
+                pst_chunk: jnp.ndarray) -> jnp.ndarray:
+    """Σ_{m∈π} PPF_ln(node, m) for a chunk of parent sets (C, s), -1 padded."""
+    pnodes = pst_chunk + (pst_chunk >= node)             # candidate -> node id
+    vals = ppf_ln(R[node, jnp.clip(pnodes, 0)])          # (C, s)
+    return jnp.where(pst_chunk < 0, 0.0, vals).sum(-1)
+
+
+def prior_table(R: jnp.ndarray, pst: jnp.ndarray, n: int,
+                chunk: int = 8192) -> jnp.ndarray:
+    """Full (n, S) additive prior table."""
+    R = jnp.asarray(R, jnp.float32)
+    S = pst.shape[0]
+    rows = []
+    for i in range(n):
+        out = [prior_chunk(R, i, pst[c0:min(c0 + chunk, S)])
+               for c0 in range(0, S, chunk)]
+        rows.append(jnp.concatenate(out))
+    return jnp.stack(rows)
+
+
+def make_prior_matrix(n: int, *, known_edges=(), forbidden_edges=(),
+                      confidence: float = 0.8) -> np.ndarray:
+    """Convenience builder: R=0.5 everywhere, `confidence` on known edges
+    (m → i given as (m, i)), `1-confidence` on forbidden ones."""
+    R = np.full((n, n), 0.5, np.float32)
+    for (m, i) in known_edges:
+        R[i, m] = confidence
+    for (m, i) in forbidden_edges:
+        R[i, m] = 1.0 - confidence
+    return R

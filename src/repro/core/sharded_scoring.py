@@ -1,0 +1,139 @@
+"""Multi-device order scoring: the paper's two-level GPU reduction (threads →
+shared-memory tree, Fig. 7) promoted one level up to devices → ICI.
+
+The parent-set axis S is sharded over the ``model`` mesh axis (the paper's
+"assign h blocks per node, split P_{π_i} over threads" becomes "split the
+score-table columns over devices"); each device computes a local masked
+max+argmax over its shard (VPU work — on TPU via the Pallas kernel, here via
+the chunked oracle), then:
+
+  global max   = pmax  over 'model'              (the paper's tree reduction)
+  global argmax= pmin  over 'model' of (idx where local==global else +inf)
+                 — deterministic tie-break, exactly the role of the
+                 thread-id tracking in the paper's Fig. 7.
+
+MCMC chains ride the ``data``/``pod`` axes unchanged (independent chains =
+pure DP), so the whole sampler is one shard_map program on the production
+mesh — scoring is TP, chains are DP, and the only cross-device traffic per
+iteration is the (n,)-vector pmax/pmin pair.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .order_scoring import (NEG_INF, consistent_mask, score_order_blocked,
+                            score_order_chunked)
+
+__all__ = ["score_order_sharded", "make_sharded_score_fn", "pad_table",
+           "sharded_chain_step"]
+
+INT_MAX = jnp.int32(2**31 - 1)
+
+
+def pad_table(table, pst, mult: int):
+    """Pad S to a multiple of `mult` (device count × block)."""
+    S = table.shape[1]
+    pad = (-S) % mult
+    if pad:
+        table = jnp.pad(table, ((0, 0), (0, pad)), constant_values=NEG_INF)
+        pst = jnp.pad(pst, ((0, pad), (0, 0)), constant_values=-1)
+    return table, pst
+
+
+def _local_score(table_l, pst_l, pos, offset, block: int,
+                 blocked: bool = True):
+    """Masked max+argmax over this device's S-shard. Returns (n,), (n,) with
+    argmax as a GLOBAL PST index (offset by the shard's start).
+
+    blocked=True uses the block-outer/node-inner scorer (§Perf hillclimb:
+    the PST block is read once for all nodes instead of once per node)."""
+    fn = score_order_blocked if blocked else score_order_chunked
+    _, idx_l, ls_l = fn(table_l, pst_l, pos,
+                        block=min(block, table_l.shape[1]))
+    return ls_l, idx_l + offset
+
+
+def score_order_sharded(table, pst, pos, mesh, *, axis: str = "model",
+                        block: int = 4096):
+    """Same contract as score_order_chunked, S sharded over `axis`.
+
+    table: (n, S) already padded so S % mesh.shape[axis] == 0.
+    Under jit with the table sharded P(None, axis) this is one shard_map
+    region; the collective payload is 2 × (n,) per call.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    n, S = table.shape
+    tp = mesh.shape[axis]
+    shard = S // tp
+    in_specs = (P(None, axis), P(axis, None), P(None))
+    out_specs = (P(), P(None), P(None))
+
+    @functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_rep=False)
+    def go(table_l, pst_l, pos):
+        my = jax.lax.axis_index(axis)
+        ls_l, idx_l = _local_score(table_l, pst_l, pos, my * shard, block)
+        ls_g = jax.lax.pmax(ls_l, axis)                       # Fig. 7, level 2
+        cand = jnp.where(ls_l >= ls_g, idx_l, INT_MAX)
+        idx_g = jax.lax.pmin(cand, axis)                      # id resolution
+        return ls_g.sum(), idx_g, ls_g
+
+    return go(table, pst, pos)
+
+
+def sharded_chain_step(states, table, pst, mesh, *, axis: str = "model",
+                       block: int = 4096):
+    """One MCMC iteration for ALL chains on the production mesh, as a single
+    shard_map program: chains are DP over the pod/data axes, the score table
+    is TP over `axis`. Per iteration the cross-device traffic is the (n,)
+    pmax/pmin pair per chain — everything else is local.
+
+    states: ChainState with a leading chains dim C divisible by the data-axes
+    extent. table must be padded (pad_table) to axis_size × block.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    from .mcmc import mcmc_step
+
+    n, S = table.shape
+    tp = mesh.shape[axis]
+    shard = S // tp
+    dax = tuple(a for a in mesh.axis_names if a != axis)
+    st_specs = jax.tree.map(lambda _: P(dax), states)
+    in_specs = (st_specs, P(None, axis), P(axis, None))
+    out_specs = st_specs
+
+    @functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_rep=False)
+    def go(states_l, table_l, pst_l):
+        my = jax.lax.axis_index(axis)
+
+        def score_fn(pos):
+            ls_l, idx_l = _local_score(table_l, pst_l, pos, my * shard, block)
+            ls_g = jax.lax.pmax(ls_l, axis)
+            cand = jnp.where(ls_l >= ls_g, idx_l, INT_MAX)
+            idx_g = jax.lax.pmin(cand, axis)
+            return ls_g.sum(), idx_g, ls_g
+
+        return jax.vmap(lambda s: mcmc_step(s, score_fn))(states_l)
+
+    return go(states, table, pst)
+
+
+def make_sharded_score_fn(table, pst, mesh, *, axis: str = "model",
+                          block: int = 4096):
+    """Closure with the (n,)-contract used by core.mcmc — the drop-in
+    multi-device replacement for make_score_fn."""
+    tp = mesh.shape[axis]
+    block = min(block, max((table.shape[1] + tp - 1) // tp, 8))
+    table, pst = pad_table(table, pst, tp * block)
+
+    def fn(pos):
+        return score_order_sharded(table, pst, pos, mesh, axis=axis,
+                                   block=block)
+    return fn

@@ -1,0 +1,5 @@
+from .bn_sampler import ancestral_sample, inject_noise
+from .networks import ALARM_EDGES, STN_EDGES, alarm_adjacency, stn_adjacency
+
+__all__ = ["ancestral_sample", "inject_noise", "ALARM_EDGES", "STN_EDGES",
+           "alarm_adjacency", "stn_adjacency"]

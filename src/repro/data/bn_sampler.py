@@ -1,0 +1,45 @@
+"""Synthetic experimental data from a ground-truth Bayesian network.
+
+Ancestral (forward) sampling from Dirichlet CPTs — the paper assumes complete
+multinomial data (§II). Noise injection (paper §VI, Fig. 11): each entry flips
+state with probability p (for q=2 a bit flip; for q>2 a uniform re-draw among
+the other states).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.graph import parents_list_from_adjacency, topological_order
+
+__all__ = ["ancestral_sample", "inject_noise"]
+
+
+def ancestral_sample(rng: np.random.Generator, adj: np.ndarray,
+                     cpts: list[np.ndarray], m: int, q: int) -> np.ndarray:
+    """m samples (m, n) int32 from the network (adj[m, i] = 1 ⇔ m → i)."""
+    n = adj.shape[0]
+    order = topological_order(adj)
+    parents = parents_list_from_adjacency(adj)
+    data = np.zeros((m, n), dtype=np.int32)
+    for i in order:
+        ps = parents[i]
+        if len(ps) == 0:
+            probs = np.broadcast_to(cpts[i][0], (m, q))
+        else:
+            code = np.zeros(m, dtype=np.int64)
+            for j, p in enumerate(ps):
+                code += data[:, p].astype(np.int64) * q ** j
+            probs = cpts[i][code]
+        u = rng.random((m, 1))
+        data[:, i] = (probs.cumsum(axis=1) < u).sum(axis=1).clip(0, q - 1)
+    return data
+
+
+def inject_noise(rng: np.random.Generator, data: np.ndarray, p: float,
+                 q: int) -> np.ndarray:
+    """Flip each entry with probability p (paper §VI fault-injection study)."""
+    flip = rng.random(data.shape) < p
+    if q == 2:
+        return np.where(flip, 1 - data, data).astype(data.dtype)
+    shift = rng.integers(1, q, size=data.shape)
+    return np.where(flip, (data + shift) % q, data).astype(data.dtype)

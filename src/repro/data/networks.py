@@ -1,0 +1,65 @@
+"""Reference networks used in the paper's experiments (§VI):
+
+* STN — the 11-node signaling transduction network from human T-cells
+  (Sachs et al., Science 2005; paper ref [10]); consensus edge set.
+* ALARM — the 37-node monitoring network (paper ref [17]); standard 46 edges.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+STN_NODES = ["Raf", "Mek", "Plcg", "PIP2", "PIP3", "Erk", "Akt", "PKA",
+             "PKC", "P38", "Jnk"]
+
+STN_EDGES = [
+    ("Erk", "Akt"), ("Mek", "Erk"), ("PIP3", "PIP2"), ("PKA", "Akt"),
+    ("PKA", "Erk"), ("PKA", "Jnk"), ("PKA", "Mek"), ("PKA", "P38"),
+    ("PKA", "Raf"), ("PKC", "Jnk"), ("PKC", "Mek"), ("PKC", "P38"),
+    ("PKC", "PKA"), ("PKC", "Raf"), ("Plcg", "PIP2"), ("Plcg", "PIP3"),
+    ("Raf", "Mek"),
+]
+
+ALARM_NODES = [
+    "HISTORY", "CVP", "PCWP", "HYPOVOLEMIA", "LVEDVOLUME", "LVFAILURE",
+    "STROKEVOLUME", "ERRLOWOUTPUT", "HRBP", "HREKG", "ERRCAUTER", "HRSAT",
+    "INSUFFANESTH", "ANAPHYLAXIS", "TPR", "EXPCO2", "KINKEDTUBE", "MINVOL",
+    "FIO2", "PVSAT", "SAO2", "PAP", "PULMEMBOLUS", "SHUNT", "INTUBATION",
+    "PRESS", "DISCONNECT", "MINVOLSET", "VENTMACH", "VENTTUBE", "VENTLUNG",
+    "VENTALV", "ARTCO2", "CATECHOL", "HR", "CO", "BP",
+]
+
+ALARM_EDGES = [
+    ("LVFAILURE", "HISTORY"), ("LVEDVOLUME", "CVP"), ("LVEDVOLUME", "PCWP"),
+    ("HYPOVOLEMIA", "LVEDVOLUME"), ("LVFAILURE", "LVEDVOLUME"),
+    ("HYPOVOLEMIA", "STROKEVOLUME"), ("LVFAILURE", "STROKEVOLUME"),
+    ("ERRLOWOUTPUT", "HRBP"), ("HR", "HRBP"), ("ERRCAUTER", "HREKG"),
+    ("HR", "HREKG"), ("ERRCAUTER", "HRSAT"), ("HR", "HRSAT"),
+    ("ANAPHYLAXIS", "TPR"), ("ARTCO2", "EXPCO2"), ("VENTLUNG", "EXPCO2"),
+    ("INTUBATION", "MINVOL"), ("VENTLUNG", "MINVOL"), ("FIO2", "PVSAT"),
+    ("VENTALV", "PVSAT"), ("PVSAT", "SAO2"), ("SHUNT", "SAO2"),
+    ("PULMEMBOLUS", "PAP"), ("INTUBATION", "SHUNT"), ("PULMEMBOLUS", "SHUNT"),
+    ("INTUBATION", "PRESS"), ("KINKEDTUBE", "PRESS"), ("VENTTUBE", "PRESS"),
+    ("MINVOLSET", "VENTMACH"), ("DISCONNECT", "VENTTUBE"),
+    ("VENTMACH", "VENTTUBE"), ("INTUBATION", "VENTLUNG"),
+    ("KINKEDTUBE", "VENTLUNG"), ("VENTTUBE", "VENTLUNG"),
+    ("INTUBATION", "VENTALV"), ("VENTLUNG", "VENTALV"),
+    ("VENTALV", "ARTCO2"), ("ARTCO2", "CATECHOL"), ("INSUFFANESTH", "CATECHOL"),
+    ("SAO2", "CATECHOL"), ("TPR", "CATECHOL"), ("CATECHOL", "HR"),
+    ("HR", "CO"), ("STROKEVOLUME", "CO"), ("CO", "BP"), ("TPR", "BP"),
+]
+
+
+def _adjacency(nodes: list[str], edges: list[tuple[str, str]]) -> np.ndarray:
+    idx = {v: i for i, v in enumerate(nodes)}
+    adj = np.zeros((len(nodes), len(nodes)), dtype=np.int8)
+    for a, b in edges:
+        adj[idx[a], idx[b]] = 1
+    return adj
+
+
+def stn_adjacency() -> np.ndarray:
+    return _adjacency(STN_NODES, STN_EDGES)
+
+
+def alarm_adjacency() -> np.ndarray:
+    return _adjacency(ALARM_NODES, ALARM_EDGES)

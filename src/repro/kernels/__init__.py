@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the compute hot spots.
+
+* order_score — the paper's GPU scoring kernel (§V): masked max+argmax over
+  parent-set-table blocks, grid-accumulated (the Fig. 7 reduction tree mapped
+  to VPU lanes + sequential grid revisiting).
+* count — preprocessing N_ijk contingency counting as one-hot × one-hot MXU
+  matmuls (the paper's "future work: accelerate preprocessing on GPU").
+* flash_attention — blockwise causal attention with online softmax for the LM
+  substrate's prefill path.
+
+Each kernel directory has kernel.py (pl.pallas_call + BlockSpec), ops.py
+(jit'd public wrapper), ref.py (pure-jnp oracle). Kernels run in interpret
+mode off-TPU; wrappers select automatically.
+"""
+from .count.ops import count_contingency
+from .flash_attention.ops import flash_attention
+from .order_score.ops import order_score
+
+__all__ = ["order_score", "count_contingency", "flash_attention"]

@@ -1,0 +1,4 @@
+from .ops import count_contingency, encode_parent_configs
+from .ref import count_ref
+
+__all__ = ["count_contingency", "encode_parent_configs", "count_ref"]

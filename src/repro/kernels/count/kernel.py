@@ -1,0 +1,58 @@
+"""Pallas TPU kernel for preprocessing contingency counting (beyond-paper:
+the paper leaves preprocessing acceleration as future work, §VII).
+
+N[c, k, j] = #{samples: parent-config-code == k and child-state == j} for a
+batch of parent sets c. Formulated as a one-hot × one-hot matmul so the MXU
+does the counting: counts_c = onehot(code_c)^T @ onehot(child), a
+(Q × m) · (m × q) product per parent set. Grid streams parent sets; the
+sample axis m is tiled into VMEM blocks and accumulated in the revisited
+output block (sequential grid).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _count_kernel(codes_ref, child_oh_ref, out_ref, *, Q: int, block_m: int):
+    mb = pl.program_id(1)
+
+    @pl.when(mb == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    codes = codes_ref[0, :]                      # (BM,) int32, -1 = padding
+    child = child_oh_ref[...]                    # (BM, q) f32
+    bins = jax.lax.broadcasted_iota(jnp.int32, (block_m, Q), 1)
+    oh = (codes[:, None] == bins).astype(jnp.float32)   # (BM, Q); pad rows all-0
+    # MXU contraction over samples: (Q, BM) @ (BM, q)
+    out_ref[0, :, :] += jax.lax.dot_general(
+        oh, child, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("Q", "block_m", "interpret"))
+def count_pallas(codes: jnp.ndarray, child_oh: jnp.ndarray, *, Q: int,
+                 block_m: int = 512, interpret: bool = False) -> jnp.ndarray:
+    """codes: (C, m) int32 mixed-radix parent configs (-1 = padded sample);
+    child_oh: (m, q) one-hot child states. Returns (C, Q, q) f32 counts.
+    m must be a multiple of block_m (pad codes with -1, child_oh with 0)."""
+    C, m = codes.shape
+    q = child_oh.shape[1]
+    assert m % block_m == 0, "pad m to a multiple of block_m"
+    grid = (C, m // block_m)
+    kernel = functools.partial(_count_kernel, Q=Q, block_m=block_m)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_m), lambda c, mb: (c, mb)),
+            pl.BlockSpec((block_m, q), lambda c, mb: (mb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Q, q), lambda c, mb: (c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((C, Q, q), jnp.float32),
+        interpret=interpret,
+    )(codes, child_oh)

@@ -1,0 +1,43 @@
+"""Public wrapper: mixed-radix encode + kernel/oracle dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import count_pallas
+from .ref import count_ref
+
+__all__ = ["count_contingency", "encode_parent_configs"]
+
+
+def encode_parent_configs(data_ext: jnp.ndarray, parent_cols: jnp.ndarray,
+                          q: int) -> jnp.ndarray:
+    """(m, n+1) data (zeros col appended), (C, s) columns -> (C, m) codes."""
+    cols = data_ext[:, parent_cols]                     # (m, C, s)
+    pw = q ** jnp.arange(parent_cols.shape[1], dtype=jnp.int32)
+    return jnp.sum(cols * pw, axis=-1).T.astype(jnp.int32)   # (C, m)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("q", "s", "block_m", "use_pallas", "interpret"))
+def count_contingency(data_ext: jnp.ndarray, child: jnp.ndarray,
+                      parent_cols: jnp.ndarray, *, q: int, s: int,
+                      block_m: int = 512, use_pallas: bool = True,
+                      interpret: bool | None = None) -> jnp.ndarray:
+    """N_ijk counts (C, q**s, q) for a chunk of parent sets of one node."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    Q = q ** s
+    codes = encode_parent_configs(data_ext, parent_cols, q)   # (C, m)
+    child_oh = jax.nn.one_hot(child, q, dtype=jnp.float32)    # (m, q)
+    if not use_pallas:
+        return count_ref(codes, child_oh, Q=Q)
+    m = codes.shape[1]
+    pad = (-m) % block_m
+    if pad:
+        codes = jnp.pad(codes, ((0, 0), (0, pad)), constant_values=-1)
+        child_oh = jnp.pad(child_oh, ((0, pad), (0, 0)))
+    return count_pallas(codes, child_oh, Q=Q, block_m=block_m,
+                        interpret=interpret)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the counting kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def count_ref(codes: jnp.ndarray, child_oh: jnp.ndarray, *, Q: int) -> jnp.ndarray:
+    """codes (C, m) int32 (-1 padding), child_oh (m, q) -> (C, Q, q) counts."""
+    oh = jax.nn.one_hot(codes, Q, dtype=jnp.float32)          # -1 -> all-zero row
+    return jnp.einsum("cmQ,mj->cQj", oh, child_oh)

@@ -1,0 +1,96 @@
+"""Blockwise causal attention with online softmax (flash attention) for TPU.
+
+Grid (batch·heads, q-blocks, kv-blocks), kv fastest ⇒ sequential accumulation
+into VMEM scratch (running max m, normalizer l, accumulator acc). Causal
+blocks strictly above the diagonal are skipped; the output is finalized at the
+last *visited* kv block of each q row. Blocks are MXU-aligned (multiples of
+128 on the contracting/lane dims recommended).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  block_q: int, block_k: int, scale: float, causal: bool,
+                  nk: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    last_ik = ((iq + 1) * block_q - 1) // block_k if causal else nk - 1
+    run = (ik * block_k <= (iq + 1) * block_q - 1) if causal else True
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, :, :]                         # (BQ, D)
+        k = k_ref[0, :, :]                         # (BK, D)
+        v = v_ref[0, :, :]                         # (BK, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            rows = iq * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            cols = ik * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+
+        m_prev = m_scr[...]                        # (BQ, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)                     # (BQ, BK)
+        alpha = jnp.exp(m_prev - m_new)            # (BQ, 1)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ik == last_ik)
+    def _finalize():
+        o_ref[0, :, :] = (acc_scr[...] /
+                          jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "block_q", "block_k",
+                                    "interpret"))
+def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                           causal: bool = True, block_q: int = 512,
+                           block_k: int = 512, interpret: bool = False):
+    """q, k, v: (BH, T, D) — already head-flattened; T divisible by blocks."""
+    BH, Tq, D = q.shape
+    Tk = k.shape[1]
+    assert Tq % block_q == 0 and Tk % block_k == 0
+    nq, nk = Tq // block_q, Tk // block_k
+    scale = 1.0 / (D ** 0.5)
+    kernel = functools.partial(_flash_kernel, block_q=block_q,
+                               block_k=block_k, scale=scale, causal=causal,
+                               nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, iq, ik: (b, iq, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, iq, ik: (b, ik, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, iq, ik: (b, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, iq, ik: (b, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Tq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

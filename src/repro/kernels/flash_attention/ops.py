@@ -1,0 +1,42 @@
+"""Public wrapper with GQA support (kv heads repeated to q heads)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+from .ref import attention_ref
+
+__all__ = ["flash_attention"]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "block_q", "block_k",
+                                    "use_pallas", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, block_q: int = 512,
+                    block_k: int = 512, use_pallas: bool = True,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """q: (B, T, Hq, D); k, v: (B, T, Hkv, D), Hq % Hkv == 0. Returns like q."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, Tq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    assert Hq % Hkv == 0
+    rep = Hq // Hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * Hq, Tq, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hq, -1, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hq, -1, D)
+    if use_pallas:
+        of = flash_attention_pallas(qf, kf, vf, causal=causal,
+                                    block_q=min(block_q, Tq),
+                                    block_k=min(block_k, kf.shape[1]),
+                                    interpret=interpret)
+    else:
+        of = attention_ref(qf, kf, vf, causal=causal)
+    return of.reshape(B, Hq, Tq, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,4 @@
+from .ops import order_score, pad_for_kernel
+from .ref import order_score_ref
+
+__all__ = ["order_score", "pad_for_kernel", "order_score_ref"]

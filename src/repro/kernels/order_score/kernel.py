@@ -1,0 +1,113 @@
+"""Pallas TPU kernel for order scoring (paper §V-B/§V, Eq. 6).
+
+Grid (S/BLK, n), parent-set block OUTER: one PST tile is fetched into VMEM
+once and all n nodes consume it while it is hot. Consistency is evaluated
+lane-parallel on the VPU; each step folds the block max+argmax into a
+persistent (n, 1) accumulator block — the paper's thread →
+shared-memory-tree → global reduction (Fig. 7) becomes lane-reduction →
+sequential-grid accumulation. The cross-device level (pmax/pmin over the
+`model` axis) lives in core/sharded_scoring.py.
+
+Two §Perf tricks mirrored from the winning jnp scorer (EXPERIMENTS.md §Perf
+cell 1):
+
+* select-instead-of-gather: candidate c maps to node c + (c ≥ i), so a
+  parent's position is either pos[c] or pos[c+1]; BOTH are materialized
+  node-independently ONCE per block (gather-free one-hot contraction over
+  the small node axis — TPU vector memory dislikes dynamic gathers) into
+  VMEM scratch, and each node then needs only an elementwise select.
+* the per-node work is a (BLK, s) compare/select + (BLK,) max — exactly the
+  compare/assign-only inner loop the paper argues for (§III-B).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -3.0e38
+
+
+def _order_score_kernel(pos_ref, table_ref, pst_ref, val_ref, idx_ref,
+                        lo_ref, hi_ref, *, block_s: int, n: int, s: int):
+    b = pl.program_id(0)          # parent-set block (outer)
+    i = pl.program_id(1)          # node (inner — PST tile stays hot)
+
+    @pl.when(jnp.logical_and(b == 0, i == 0))
+    def _init():
+        val_ref[...] = jnp.full(val_ref.shape, NEG_INF, val_ref.dtype)
+        idx_ref[...] = jnp.zeros(idx_ref.shape, idx_ref.dtype)
+
+    pst = pst_ref[...]                            # (BLK, s)
+    pos = pos_ref[...]                            # (n,)
+
+    @pl.when(i == 0)
+    def _prep():
+        # positions under both candidate->node maps, once per block
+        safe = jnp.maximum(pst, 0)
+        iota = jax.lax.broadcasted_iota(jnp.int32, (block_s, s, n), 2)
+        oh_lo = safe[..., None] == iota
+        lo_ref[...] = jnp.sum(jnp.where(oh_lo, pos[None, None, :], 0),
+                              axis=-1).astype(jnp.int32)
+        hi = jnp.minimum(safe + 1, n - 1)          # c+1==n has pos anyway
+        oh_hi = hi[..., None] == iota
+        hi_ref[...] = jnp.sum(jnp.where(oh_hi, pos[None, None, :], 0),
+                              axis=-1).astype(jnp.int32)
+
+    scores = table_ref[0, :]                      # (BLK,)
+    my_pos = jnp.sum(jnp.where(jnp.arange(n) == i, pos, 0))
+
+    ppos = jnp.where(pst >= i, hi_ref[...], lo_ref[...])
+    ok = jnp.where(pst < 0, True, ppos < my_pos)  # padding always consistent
+    consistent = jnp.all(ok, axis=-1)             # (BLK,)
+
+    masked = jnp.where(consistent, scores, NEG_INF)
+    larg = jnp.argmax(masked).astype(jnp.int32)
+    lmax = jnp.max(masked)
+
+    cur = pl.load(val_ref, (i, 0))
+    better = lmax > cur
+    pl.store(val_ref, (i, 0), jnp.where(better, lmax, cur))
+    pl.store(idx_ref, (i, 0),
+             jnp.where(better, larg + b * block_s, pl.load(idx_ref, (i, 0))))
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def order_score_pallas(table: jnp.ndarray, pst: jnp.ndarray, pos: jnp.ndarray,
+                       *, block_s: int = 2048, interpret: bool = False):
+    """(n, S) table, (S, s) pst, (n,) pos -> (best_val (n,), best_idx (n,)).
+
+    S must be a multiple of block_s (pad table with NEG_INF, pst with -1).
+    """
+    n, S = table.shape
+    s = pst.shape[1]
+    assert S % block_s == 0, "pad S to a multiple of block_s"
+    grid = (S // block_s, n)
+
+    kernel = functools.partial(_order_score_kernel, block_s=block_s, n=n, s=s)
+    val, idx = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n,), lambda b, i: (0,)),              # pos
+            pl.BlockSpec((1, block_s), lambda b, i: (i, b)),    # table tile
+            pl.BlockSpec((block_s, s), lambda b, i: (b, 0)),    # PST tile (hot)
+        ],
+        out_specs=[
+            pl.BlockSpec((n, 1), lambda b, i: (0, 0)),          # running max
+            pl.BlockSpec((n, 1), lambda b, i: (0, 0)),          # running argmax
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+            jax.ShapeDtypeStruct((n, 1), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_s, s), jnp.int32),                # ppos_lo
+            pltpu.VMEM((block_s, s), jnp.int32),                # ppos_hi
+        ],
+        interpret=interpret,
+    )(pos, table, pst)
+    return val[:, 0], idx[:, 0]

@@ -1,0 +1,41 @@
+"""Public jit'd wrapper: pads, dispatches kernel vs oracle, returns the
+(score, best_idx, best_ls) contract used by core.mcmc."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import NEG_INF, order_score_pallas
+from .ref import order_score_ref
+
+__all__ = ["order_score", "pad_for_kernel"]
+
+
+def pad_for_kernel(table: jnp.ndarray, pst: jnp.ndarray, block_s: int):
+    """Pad S to a multiple of block_s: scores with NEG_INF (never win),
+    parent sets with -1 (vacuously consistent, but unreachable)."""
+    S = table.shape[1]
+    pad = (-S) % block_s
+    if pad:
+        table = jnp.pad(table, ((0, 0), (0, pad)), constant_values=NEG_INF)
+        pst = jnp.pad(pst, ((0, pad), (0, 0)), constant_values=-1)
+    return table, pst
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_s", "use_pallas", "interpret"))
+def order_score(table: jnp.ndarray, pst: jnp.ndarray, pos: jnp.ndarray, *,
+                block_s: int = 2048, use_pallas: bool = True,
+                interpret: bool | None = None):
+    """Score an order (paper Eq. 6). Returns (score, best_idx (n,), best_ls (n,))."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if use_pallas:
+        tbl, ps = pad_for_kernel(table, pst, block_s)
+        val, idx = order_score_pallas(tbl, ps, pos, block_s=block_s,
+                                      interpret=interpret)
+    else:
+        val, idx = order_score_ref(table, pst, pos)
+    return val.sum(), idx, val

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the order-scoring kernel (same contract)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import NEG_INF
+
+
+def order_score_ref(table: jnp.ndarray, pst: jnp.ndarray, pos: jnp.ndarray):
+    """(n, S), (S, s), (n,) -> (best_val (n,), best_idx (n,))."""
+    n, S = table.shape
+
+    def per_node(i, row):
+        pnode = pst + (pst >= i).astype(jnp.int32)
+        ppos = pos[jnp.clip(pnode, 0)]
+        ok = jnp.where(pst < 0, True, ppos < pos[i])
+        masked = jnp.where(jnp.all(ok, axis=-1), row, NEG_INF)
+        a = jnp.argmax(masked)
+        return masked[a], a.astype(jnp.int32)
+
+    return jax.vmap(per_node)(jnp.arange(n), table)

@@ -1,0 +1,150 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware needed).
+
+Three terms per (arch × shape × mesh), in seconds:
+
+  compute    = HLO_FLOPs_total  / (chips × 197e12 bf16 FLOP/s)
+  memory     = HLO_bytes_total  / (chips × 819e9  B/s HBM)
+  collective = coll_bytes_total / (chips × 50e9   B/s per ICI link)
+
+`cost_analysis()` on the SPMD-partitioned module reports *per-device* flops
+and bytes; collective bytes are parsed from the compiled HLO text (operand
+sizes of all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute). Totals are per-device × chips, so the ratios above
+reduce to per-device quantities over per-chip rates.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass
+
+__all__ = ["HW", "parse_collective_bytes", "roofline_terms", "RooflineReport"]
+
+# TPU v5e (target hardware; this container is CPU-only)
+HW = {
+    "peak_flops": 197e12,     # bf16 per chip
+    "hbm_bw": 819e9,          # bytes/s per chip
+    "ici_bw": 50e9,           # bytes/s per link
+}
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# result type(s) between '=' and the op name; post-optimization HLO operands
+# are bare %refs, so sizes come from the result shape + replica-group algebra.
+_INSTR_RE = re.compile(
+    r"=\s*([^=\n]*?)\s*"
+    r"(all-reduce(?:-start)?|all-gather(?:-start)?|reduce-scatter|"
+    r"all-to-all|collective-permute(?:-start)?|ragged-all-to-all)"
+    r"\(")
+_GROUPS_RE = re.compile(r"replica_groups=(\{\{[\d,]+\}|\[(\d+),(\d+)\])")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return default
+    if m.group(2) is not None:        # iota form [n_groups, group_size]<=[...]
+        return int(m.group(3))
+    first = m.group(1)[2:].split("}")[0]
+    return max(len(first.split(",")), 1)
+
+
+def parse_collective_bytes(hlo_text: str, n_devices: int = 16) -> dict[str, int]:
+    """Per-device bytes moved on the interconnect, per collective type.
+
+    Ring-algorithm accounting on the result size S with group size g:
+    all-reduce 2S(g−1)/g, all-gather S(g−1)/g, reduce-scatter S(g−1),
+    all-to-all S(g−1)/g, collective-permute S.
+    """
+    out: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        op = m.group(2).replace("-start", "")
+        S = sum(_shape_bytes(dt, dims)
+                for dt, dims in _SHAPE_RE.findall(m.group(1)))
+        g = _group_size(line, n_devices)
+        if op == "all-reduce":
+            moved = 2 * S * (g - 1) / g
+        elif op == "reduce-scatter":
+            moved = S * (g - 1)
+        elif op == "collective-permute":
+            moved = S
+        else:                          # all-gather, all-to-all
+            moved = S * (g - 1) / g
+        out[op] = out.get(op, 0) + int(moved)
+    return out
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_breakdown: dict
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float            # 6·N(_active)·D, global
+    useful_ratio: float           # model_flops / (flops_per_device·chips)
+    peak_memory_bytes: float = 0.0
+
+    def as_dict(self):
+        return asdict(self)
+
+
+def roofline_terms(*, arch: str, shape: str, mesh_name: str, chips: int,
+                   flops_per_device: float, bytes_per_device: float,
+                   coll: dict[str, int], model_flops: float,
+                   peak_memory: float = 0.0) -> RooflineReport:
+    coll_bytes = float(sum(coll.values()))
+    t_c = flops_per_device / HW["peak_flops"]
+    t_m = bytes_per_device / HW["hbm_bw"]
+    t_x = coll_bytes / HW["ici_bw"]
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bottleneck = max(terms, key=terms.get)
+    total_flops = flops_per_device * chips
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_device=flops_per_device, bytes_per_device=bytes_per_device,
+        coll_bytes_per_device=coll_bytes, coll_breakdown=coll,
+        t_compute=t_c, t_memory=t_m, t_collective=t_x, bottleneck=bottleneck,
+        model_flops=model_flops,
+        useful_ratio=(model_flops / total_flops) if total_flops else 0.0,
+        peak_memory_bytes=peak_memory)
+
+
+def model_flops_for(cfg, shape_cfg) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE); D = tokens processed this step.
+    Train steps cost 3× forward (fwd + bwd)."""
+    total, active = cfg.param_count()
+    n = active
+    if shape_cfg.mode == "train":
+        tokens = shape_cfg.global_batch * shape_cfg.seq_len
+        return 6.0 * n * tokens
+    if shape_cfg.mode == "prefill":
+        tokens = shape_cfg.global_batch * shape_cfg.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape_cfg.global_batch          # decode: 1 token/seq

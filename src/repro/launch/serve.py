@@ -1,0 +1,84 @@
+"""Batched serving driver: prefill + greedy decode loop with a KV cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-7b --reduced \
+        --batch 4 --prompt-len 32 --gen 16
+
+Continuous-batching shape: all requests share the step; finished requests are
+masked (greedy argmax keeps emitting pad, which is dropped on detokenize).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ARCH_IDS, get_config
+from ..models import Model
+from ..models.layers import set_mesh
+from .mesh import make_local_mesh, make_production_mesh
+
+
+def greedy_generate(model: Model, params, prompts: jnp.ndarray, gen: int,
+                    *, enc_feats=None, cache_len: int | None = None):
+    """prompts: (B, T0) -> (B, T0+gen) tokens, greedy."""
+    B, T0 = prompts.shape
+    cache_len = cache_len or (T0 + gen + 8)
+    cache = model.init_cache(B, cache_len)
+    prefill = jax.jit(lambda p, t, c: model.prefill(p, t, c,
+                                                    enc_feats=enc_feats))
+    decode = jax.jit(model.decode_step)
+
+    logits, cache = prefill(params, prompts, cache)
+    out = [prompts]
+    tok = jnp.argmax(logits[:, -1:, :model.cfg.vocab], axis=-1).astype(jnp.int32)
+    for _ in range(gen):
+        out.append(tok)
+        logits, cache = decode(params, cache, tok)
+        tok = jnp.argmax(logits[:, -1:, :model.cfg.vocab], axis=-1).astype(jnp.int32)
+    return jnp.concatenate(out, axis=1)
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="rwkv6-7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_local_mesh(1, 1))
+    set_mesh(mesh)
+    model = Model(cfg, tp=mesh.shape["model"])
+    params = model.init(jax.random.key(args.seed))
+    prompts = jax.random.randint(jax.random.key(1),
+                                 (args.batch, args.prompt_len), 0, cfg.vocab)
+    enc = (jax.random.normal(jax.random.key(2),
+                             (args.batch, args.prompt_len // cfg.enc_seq_divisor,
+                              cfg.d_model))
+           if cfg.family == "encdec" else None)
+
+    t0 = time.time()
+    toks = greedy_generate(model, params, prompts, args.gen, enc_feats=enc)
+    dt = time.time() - t0
+    toks = np.asarray(toks)
+    print(f"generated {args.gen} tokens × {args.batch} requests "
+          f"in {dt:.2f}s ({args.gen*args.batch/dt:.1f} tok/s)")
+    print("sample:", toks[0, -args.gen:].tolist())
+    set_mesh(None)
+    assert toks.shape == (args.batch, args.prompt_len + args.gen)
+    assert (toks >= 0).all() and (toks < cfg.vocab).all()
+    return {"tokens": toks, "seconds": dt}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,208 @@
+"""Input/step specifications for every (arch × shape) cell.
+
+`input_specs(arch, shape)` returns ShapeDtypeStruct stand-ins (weak-type
+correct, shardable, zero allocation) for each model input, plus the
+PartitionSpecs that place them on the mesh. `build_step(...)` returns the
+jittable step function the dry-run lowers:
+
+  train_*   -> train_step(params, opt_state, batch)
+  prefill_* -> prefill_step(params, tokens[, enc_feats])  (last-token logits + cache)
+  decode_*  -> serve_step(params, cache, tokens)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs import get_config, get_shape
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import Model
+from ..models.attention import KVCache
+from ..models.rglru import RGLRUState
+from ..models.rwkv6 import RWKVState
+from ..optim import AdamWConfig, adamw_init, adamw_update, opt_state_specs
+
+__all__ = ["input_specs", "cache_specs", "build_step", "build_model",
+           "batch_spec"]
+
+
+def build_model(cfg: ModelConfig, mesh, rwkv_chunk: int = 0,
+                rwkv_sp: bool = False, moe_gathered: bool = False,
+                moe_ep: bool = False, fsdp_only: bool = False,
+                use_flash: bool = False) -> Model:
+    tp = mesh.shape["model"]
+    batch_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    if fsdp_only:
+        # small-model strategy: batch occupies every axis, weights are
+        # FSDP-gathered per layer, attention/MoE fully token-local
+        batch_axes = batch_axes + ("model",)
+    return Model(cfg, tp=tp, batch_axes=batch_axes, rwkv_chunk=rwkv_chunk,
+                 rwkv_sp=rwkv_sp, moe_gathered=moe_gathered, moe_ep=moe_ep,
+                 use_flash=use_flash)
+
+
+def batch_spec(mesh, batch: int) -> Any:
+    """Batch-dim spec; batch-1 cells replicate (latency-bound serving)."""
+    axes = [a for a in mesh.axis_names if a in ("pod", "data")]
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return P(tuple(axes)) if batch % n == 0 and batch >= n else P()
+
+
+def _seq_axes(mesh, batch_sp) -> Any:
+    """Sequence-dim sharding for decode caches: `model`, plus the batch axes
+    when the batch doesn't occupy them (long_500k: whole-pod sequence
+    parallelism)."""
+    if batch_sp == P():
+        return tuple(a for a in mesh.axis_names)
+    return "model"
+
+
+def cache_specs(cache_abstract, mesh, batch_sp) -> Any:
+    """PartitionSpecs mirroring Model.init_cache's structure."""
+    b = batch_sp if batch_sp != P() else None
+    bax = None if b is None else b[0]
+    seq_ax = _seq_axes(mesh, batch_sp)
+
+    def rec(node, depth):
+        if isinstance(node, KVCache):
+            kv = P(bax, seq_ax, None, None) if depth == 0 else \
+                 P(None, bax, seq_ax, None, None)
+            return KVCache(kv, kv, P())
+        if isinstance(node, RGLRUState):
+            h = P(bax, "model") if depth == 0 else P(None, bax, "model")
+            c = P(bax, None, "model") if depth == 0 else P(None, bax, None, "model")
+            return RGLRUState(h, c)
+        if isinstance(node, RWKVState):
+            wkv = P(bax, "model", None, None) if depth == 0 else \
+                  P(None, bax, "model", None, None)
+            sh = P(bax, "model") if depth == 0 else P(None, bax, "model")
+            return RWKVState(wkv, sh, sh)
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if k == "index":
+                    out[k] = P()
+                elif k == "enc_out":
+                    out[k] = P(bax, None, None)
+                elif k == "layers":
+                    out[k] = rec(v, 1)
+                elif k == "tail":
+                    out[k] = {kk: rec(vv, 0) for kk, vv in v.items()}
+                else:
+                    out[k] = rec(v, depth)
+            return out
+        raise TypeError(type(node))
+
+    return rec(cache_abstract, 0)
+
+
+def input_specs(arch: str, shape_name: str, mesh) -> tuple[dict, dict]:
+    """(abstract inputs, their PartitionSpecs) for the cell's step function."""
+    cfg = get_config(arch)
+    shp = get_shape(shape_name)
+    B, S = shp.global_batch, shp.seq_len
+    bsp = batch_spec(mesh, B)
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    model = build_model(cfg, mesh)
+
+    if shp.mode == "train":
+        inputs = {"tokens": tok, "labels": tok}
+        specs = {"tokens": bsp, "labels": bsp}
+        if cfg.family == "encdec":
+            inputs["enc_feats"] = jax.ShapeDtypeStruct(
+                (B, S // cfg.enc_seq_divisor, cfg.d_model), jnp.bfloat16)
+            specs["enc_feats"] = P(None if bsp == P() else bsp[0], None, None)
+        return inputs, specs
+
+    if shp.mode == "prefill":
+        inputs = {"tokens": tok}
+        specs = {"tokens": bsp}
+        if cfg.family == "encdec":
+            inputs["enc_feats"] = jax.ShapeDtypeStruct(
+                (B, S // cfg.enc_seq_divisor, cfg.d_model), jnp.bfloat16)
+            specs["enc_feats"] = P(None if bsp == P() else bsp[0], None, None)
+        return inputs, specs
+
+    # decode: one new token against a seq_len cache
+    cache = jax.eval_shape(lambda: model.init_cache(B, S))
+    csp = cache_specs(cache, mesh, bsp)
+    inputs = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+              "cache": cache}
+    specs = {"tokens": bsp, "cache": csp}
+    return inputs, specs
+
+
+def build_step(arch: str, shape_name: str, mesh, *,
+               opt_cfg: AdamWConfig | None = None, rwkv_chunk: int = 0,
+               rwkv_sp: bool = False, moe_gathered: bool = False,
+               moe_ep: bool = False, use_flash: bool = False,
+               fsdp_only: bool = False, microbatch: int = 1,
+               accum_dtype=jnp.float32, moment_dtype=None):
+    """Returns (step_fn, model). Signature depends on the cell's mode:
+
+    train:   step(params, opt_state, batch) -> (params, opt_state, loss)
+    prefill: step(params, tokens[, enc_feats]) -> (last_logits, cache)
+    decode:  step(params, cache, tokens) -> (logits, cache)
+
+    microbatch > 1 enables gradient accumulation: the global batch is split
+    into `microbatch` chunks scanned sequentially — activation peak drops
+    ~microbatch x at the price of one grads-sized accumulator in
+    `accum_dtype` (f32 default; bf16 halves it — the memory-fit lever for
+    llama3-405b on 16 GB v5e, see EXPERIMENTS.md §Perf).
+    """
+    cfg = get_config(arch)
+    shp = get_shape(shape_name)
+    model = build_model(cfg, mesh, rwkv_chunk=rwkv_chunk, rwkv_sp=rwkv_sp,
+                        moe_gathered=moe_gathered, moe_ep=moe_ep,
+                        fsdp_only=fsdp_only, use_flash=use_flash)
+    opt_cfg = opt_cfg or AdamWConfig()
+    if moment_dtype is not None:
+        opt_cfg = opt_cfg._replace(moment_dtype=moment_dtype)
+
+    if shp.mode == "train":
+        if microbatch > 1:
+            def train_step_mb(params, opt_state, batch):
+                k = microbatch
+                mbs = jax.tree.map(
+                    lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]),
+                    batch)
+                acc0 = jax.tree.map(
+                    lambda pp: jnp.zeros(pp.shape, accum_dtype), params)
+
+                def body(acc, mb):
+                    loss, grads = jax.value_and_grad(model.loss)(params, mb)
+                    acc = jax.tree.map(
+                        lambda a, g: a + g.astype(accum_dtype), acc, grads)
+                    return acc, loss
+
+                acc, losses = jax.lax.scan(body, acc0, mbs)
+                grads = jax.tree.map(lambda a: a / k, acc)
+                params, opt_state, metrics = adamw_update(
+                    grads, opt_state, params, opt_cfg)
+                return params, opt_state, {"loss": losses.mean(), **metrics}
+            return train_step_mb, model
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(model.loss)(params, batch)
+            params, opt_state, metrics = adamw_update(
+                grads, opt_state, params, opt_cfg)
+            return params, opt_state, {"loss": loss, **metrics}
+        return train_step, model
+
+    if shp.mode == "prefill":
+        def prefill_step(params, tokens, enc_feats=None):
+            cache = model.init_cache(tokens.shape[0], shp.seq_len)
+            logits, cache = model.prefill(params, tokens, cache,
+                                          enc_feats=enc_feats)
+            return logits[:, -1:, :], cache
+        return prefill_step, model
+
+    def serve_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+    return serve_step, model

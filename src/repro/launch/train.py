@@ -1,0 +1,119 @@
+"""End-to-end LM training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi-34b --steps 200 \
+        --reduced --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+On this CPU container use --reduced (family-preserving small config); on a
+pod the same driver runs the full config on the production mesh. Features:
+deterministic resumable data, async checkpointing + auto-resume, optional
+int8 gradient compression (error feedback), straggler/elastic hooks.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
+from ..configs import ARCH_IDS, get_config
+from ..data.lm_pipeline import batch_iterator
+from ..models import Model
+from ..models.layers import set_mesh
+from ..optim import (AdamWConfig, adamw_init, adamw_update, compress_grads,
+                     compress_init, warmup_cosine)
+from .mesh import make_local_mesh, make_production_mesh
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig, total_steps: int,
+                    compress: bool = False):
+    def step_fn(params, opt_state, comp_state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        if compress:
+            grads, comp_state = compress_grads(grads, comp_state)
+        lr_scale = warmup_cosine(opt_state.step, warmup=max(total_steps // 20, 1),
+                                 total=total_steps)
+        params, opt_state, metrics = adamw_update(grads, opt_state, params,
+                                                  opt_cfg, lr_scale)
+        return params, opt_state, comp_state, {"loss": loss, **metrics}
+    return jax.jit(step_fn, donate_argnums=(0, 1, 2))
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="granite-moe-3b-a800m")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--reduced-100m", action="store_true",
+                    help="~100M-param family-preserving config (examples)")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    elif args.reduced_100m:
+        cfg = dataclasses.replace(
+            cfg.reduced(), n_layers=12, d_model=768, d_ff=2048,
+            n_heads=12, n_kv_heads=4, head_dim=64, vocab=32768)
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_local_mesh(1, 1))
+    set_mesh(mesh)
+    model = Model(cfg, tp=mesh.shape["model"])
+    opt_cfg = AdamWConfig(lr=args.lr)
+
+    params = model.init(jax.random.key(args.seed))
+    opt_state = adamw_init(params, opt_cfg)
+    comp_state = compress_init(params)
+    start_step = 0
+
+    ckpt = AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
+    if ckpt and latest_step(args.ckpt_dir) is not None:
+        (params, opt_state), meta = restore_checkpoint(
+            args.ckpt_dir, (params, opt_state))
+        start_step = meta["step"] + 1
+        print(f"resumed from step {meta['step']}")
+
+    step_fn = make_train_step(model, opt_cfg, args.steps,
+                              compress=args.compress_grads)
+    enc_shape = ((args.batch, args.seq // cfg.enc_seq_divisor, cfg.d_model)
+                 if cfg.family == "encdec" else None)
+    data = batch_iterator(start_step, global_batch=args.batch,
+                          seq_len=args.seq, vocab=cfg.vocab, seed=args.seed,
+                          enc_feats_shape=enc_shape)
+
+    losses = []
+    t0 = time.time()
+    for step, batch in zip(range(start_step, args.steps), data):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt_state, comp_state, metrics = step_fn(
+            params, opt_state, comp_state, batch)
+        losses.append(float(metrics["loss"]))
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss {losses[-1]:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"({(time.time()-t0)/max(len(losses),1):.2f}s/step)",
+                  flush=True)
+        if ckpt and (step % args.ckpt_every == 0 or step == args.steps - 1):
+            ckpt.save(step, (params, opt_state), {"step": step})
+    if ckpt:
+        ckpt.wait()
+    set_mesh(None)
+    return {"first_loss": losses[0] if losses else None,
+            "last_loss": losses[-1] if losses else None,
+            "losses": losses}
+
+
+if __name__ == "__main__":
+    main()

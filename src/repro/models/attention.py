@@ -1,0 +1,213 @@
+"""GQA/MQA attention with TP head padding, sliding windows, KV cache.
+
+Head layout (DESIGN.md §5): query heads are organized as (Hkv, G) groups with
+G padded to G_pad so that Hkv·G_pad is divisible by the model-axis size; a
+static head mask zeroes the padded slots, making padding mathematically inert
+(output AND gradients of padded slots vanish — the mask is applied to the
+attention output before the out-projection). K/V heads are replicated over
+`model` and the attention einsum runs grouped, so GQA needs no kv gather or
+repeat.
+
+Decode uses a sequence-sharded KV cache (seq on `model`): softmax partial
+reductions over the sharded axis are inserted by the SPMD partitioner.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from .layers import ParamDef, rope, constrain
+
+__all__ = ["attn_defs", "attention", "AttnDims", "init_kv_cache", "KVCache"]
+
+NEG = -1.0e30
+
+
+class AttnDims(NamedTuple):
+    hkv: int
+    g: int        # real groups (Hq // Hkv)
+    g_pad: int    # padded groups (Hkv*g_pad divisible by tp)
+    hd: int
+
+    @property
+    def hq_pad(self) -> int:
+        return self.hkv * self.g_pad
+
+
+def attn_dims(cfg: ModelConfig, tp: int) -> AttnDims:
+    hkv, hq, hd = cfg.n_kv_heads, cfg.n_heads, cfg.hd
+    g = hq // hkv
+    g_pad = g
+    while (hkv * g_pad) % tp:
+        g_pad += 1
+    return AttnDims(hkv, g, g_pad, hd)
+
+
+def attn_defs(cfg: ModelConfig, tp: int, dtype) -> dict:
+    d = cfg.d_model
+    dims = attn_dims(cfg, tp)
+    return {
+        "wq": ParamDef((d, dims.hq_pad * dims.hd), P("data", "model"), dtype),
+        "wk": ParamDef((d, dims.hkv * dims.hd), P("data", None), dtype),
+        "wv": ParamDef((d, dims.hkv * dims.hd), P("data", None), dtype),
+        "wo": ParamDef((dims.hq_pad * dims.hd, d), P("model", "data"), dtype),
+    }
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray       # (B, S, Hkv, hd)
+    v: jnp.ndarray
+    index: jnp.ndarray   # scalar int32 — number of valid positions
+
+
+def init_kv_cache(batch: int, seq: int, cfg: ModelConfig, dtype) -> KVCache:
+    dims = attn_dims(cfg, 1)
+    shape = (batch, seq, dims.hkv, dims.hd)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                   jnp.zeros((), jnp.int32))
+
+
+def _head_mask(dims: AttnDims, dtype) -> jnp.ndarray:
+    """(Hkv, G_pad) 1.0 for real query heads, 0.0 for padded slots."""
+    return (jnp.arange(dims.g_pad) < dims.g).astype(dtype)[None, :].repeat(
+        dims.hkv, axis=0)
+
+
+def attention(params: dict, x: jnp.ndarray, *, cfg: ModelConfig,
+              dims: AttnDims, positions: jnp.ndarray,
+              cache: KVCache | None = None,
+              kv_x: jnp.ndarray | None = None,
+              static_kv: KVCache | None = None,
+              causal: bool = True, window: int = 0,
+              batch_axes=("data",),
+              use_flash: bool = False) -> tuple[jnp.ndarray, KVCache | None]:
+    """x: (B, T, d). kv_x: cross-attention source (B, Tk, d) (causal=False).
+    cache: decode mode (T == 1 expected, appends then attends).
+    static_kv: cross-attention K/V cache — at prefill (T > 1) K/V are
+    computed from kv_x and STORED; at decode (T == 1) they are READ, so the
+    encoder projections are never recomputed per step (§Roofline: seamless
+    decode useful-ratio fix)."""
+    B, T, d = x.shape
+    hkv, gp, hd = dims.hkv, dims.g_pad, dims.hd
+    # TP axis for heads; None under fsdp_only (batch occupies every axis)
+    tp_ax = None if "model" in batch_axes else "model"
+
+    q = jnp.einsum("btd,dh->bth", x, params["wq"])
+    q = constrain(q, P(batch_axes, None, tp_ax))
+    q = q.reshape(B, T, hkv, gp, hd)
+    if static_kv is not None and T == 1:
+        # decode with precomputed cross-K/V
+        k = static_kv.k.astype(x.dtype)
+        v = static_kv.v.astype(x.dtype)
+    else:
+        src = x if kv_x is None else kv_x
+        k = jnp.einsum("btd,dh->bth", src, params["wk"]).reshape(
+            B, -1, hkv, hd)
+        v = jnp.einsum("btd,dh->bth", src, params["wv"]).reshape(
+            B, -1, hkv, hd)
+    if static_kv is not None and T > 1:
+        static_kv = KVCache(k.astype(static_kv.k.dtype),
+                            v.astype(static_kv.v.dtype),
+                            jnp.asarray(k.shape[1], jnp.int32))
+
+    if kv_x is None:  # self-attention: rotary embedding
+        kv_pos = positions if cache is None else positions
+        q = rope(q.reshape(B, T, hkv * gp, hd), positions,
+                 cfg.rope_theta).reshape(B, T, hkv, gp, hd)
+        k = rope(k, kv_pos, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        # decode: write this step's k/v at cache.index, attend over the cache
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), cache.index, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), cache.index, axis=1)
+        spec = P(batch_axes, tp_ax, None, None)
+        k_cache = constrain(k_cache, spec)
+        v_cache = constrain(v_cache, spec)
+        new_cache = KVCache(k_cache, v_cache, cache.index + T)
+        k, v = k_cache.astype(x.dtype), v_cache.astype(x.dtype)
+
+    if use_flash and T > 1 and T % 1024 == 0:
+        # flash-algorithm path: query-block scan, no (T, S) materialization
+        out = blockwise_attention(q, k, v, positions,
+                                  causal=causal or cache is not None,
+                                  window=window)
+        out = out * _head_mask(dims, out.dtype)[None, None, :, :, None]
+        out = out.astype(x.dtype).reshape(B, T, hkv * gp * hd)
+        out = constrain(out, P(batch_axes, None, tp_ax))
+        y = jnp.einsum("bth,hd->btd", out, params["wo"])
+        if static_kv is not None:
+            return y, static_kv
+        return y, new_cache
+
+    scale = hd ** -0.5
+    scores = jnp.einsum("btkgd,bskd->bkgts", q, k).astype(jnp.float32) * scale
+
+    S = k.shape[1]
+    spos = jnp.arange(S) if cache is not None else positions
+    qpos = positions
+    if cache is not None:
+        valid = spos[None, None, None, None, :] <= (cache.index + jnp.arange(T))[None, None, None, :, None]
+        scores = jnp.where(valid, scores, NEG)
+        if window:
+            near = spos[None, None, None, None, :] > (cache.index + jnp.arange(T))[None, None, None, :, None] - window
+            scores = jnp.where(near, scores, NEG)
+    elif causal:
+        m = qpos[..., :, None] >= spos[..., None, :]
+        if window:
+            m = m & (qpos[..., :, None] - spos[..., None, :] < window)
+        scores = jnp.where(m[:, None, None, :, :] if m.ndim == 3 else m, scores, NEG)
+
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgts,bskd->btkgd", probs, v)
+    out = out * _head_mask(dims, out.dtype)[None, None, :, :, None]
+    out = out.reshape(B, T, hkv * gp * hd)
+    out = constrain(out, P(batch_axes, None, tp_ax))
+    y = jnp.einsum("bth,hd->btd", out, params["wo"])
+    if static_kv is not None:
+        return y, static_kv
+    return y, new_cache
+
+
+def blockwise_attention(q, k, v, positions, *, causal=True, window=0,
+                        block_q: int = 1024):
+    """Flash-algorithm attention, jnp edition: lax.scan over QUERY blocks
+    with online softmax — never materializes the full (T, S) score matrix
+    (peak memory O(T·block) instead of O(T²)). Exact (tested vs the naive
+    path). On TPU the Pallas kernel (kernels/flash_attention) is the fast
+    path; this is the portable algorithm with the same memory shape.
+
+    q: (B, T, Hkv, G, hd); k, v: (B, S, Hkv, hd); positions: (B, T).
+    Returns (B, T, Hkv, G, hd) float32.
+    """
+    B, T, Hkv, G, hd = q.shape
+    S = k.shape[1]
+    nb = T // block_q
+    scale = hd ** -0.5
+    qf = q.astype(jnp.float32).reshape(B, nb, block_q, Hkv, G, hd)
+    pf = positions.reshape(B, nb, block_q)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    spos = jnp.arange(S)
+
+    def per_block(args):
+        qb, pb = args                                  # (B,blk,Hkv,G,hd), (B,blk)
+        sc = jnp.einsum("btkgd,bskd->bkgts", qb, kf) * scale
+        m = pb[:, None, None, :, None] >= spos[None, None, None, None, :]             if causal else jnp.ones((), bool)
+        if window:
+            m = m & (pb[:, None, None, :, None]
+                     - spos[None, None, None, None, :] < window)
+        sc = jnp.where(m, sc, NEG)
+        mx = sc.max(axis=-1, keepdims=True)
+        p = jnp.exp(sc - mx)
+        o = jnp.einsum("bkgts,bskd->btkgd", p, vf)
+        return o / p.sum(axis=-1).transpose(0, 3, 1, 2)[..., None]
+
+    out = jax.lax.map(per_block, (qf.transpose(1, 0, 2, 3, 4, 5),
+                                  pf.transpose(1, 0, 2)))
+    return out.transpose(1, 0, 2, 3, 4, 5).reshape(B, T, Hkv, G, hd)

@@ -1,0 +1,125 @@
+"""Shared model machinery: parameter definitions (shape+sharding+init in one
+place, so init / specs / abstract views can never drift), norms, RoPE, MLP.
+
+Sharding convention (DESIGN.md §5): PartitionSpecs mention the logical axes
+"data" (FSDP/batch) and "model" (TP). The launcher maps batch specs to
+("pod","data") on the multi-pod mesh; params stay pod-replicated (pure DP over
+pods) unless pipeline parallelism is enabled.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["ParamDef", "init_params", "param_specs", "abstract_params", "get_mesh",
+           "rms_norm", "rope", "swiglu", "DTYPES", "set_mesh", "constrain"]
+
+# Active mesh for sharding constraints. None (default) = single-process smoke
+# mode: constraints become no-ops so models run on bare CPU without a mesh.
+_MESH = None
+
+
+def set_mesh(mesh) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh():
+    return _MESH
+
+
+def constrain(x: jnp.ndarray, spec: P) -> jnp.ndarray:
+    """Sharding constraint that degrades gracefully: axes that do not divide
+    the corresponding dim are dropped (e.g. batch-1 serving cells)."""
+    if _MESH is None:
+        return x
+    from jax.sharding import NamedSharding
+
+    def ok(dim: int, entry) -> bool:
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        n = 1
+        for a in axes:
+            n *= dict(zip(_MESH.axis_names, _MESH.devices.shape))[a]
+        return dim % n == 0
+
+    fixed = tuple(
+        (e if e is None or ok(d, e) else None)
+        for d, e in zip(x.shape, tuple(spec) + (None,) * (x.ndim - len(spec))))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, P(*fixed)))
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+          "float16": jnp.float16}
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    spec: P = P()
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"          # normal | zeros | ones
+    scale: float | None = None    # None -> 1/sqrt(fan_in)
+
+
+def _tree_map_defs(f: Callable[[ParamDef], Any], defs):
+    return jax.tree.map(f, defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def init_params(key: jax.Array, defs) -> Any:
+    leaves = [d for d in jax.tree.leaves(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))]
+    keys = list(jax.random.split(key, max(len(leaves), 1)))
+    it = iter(keys)
+
+    def make(d: ParamDef):
+        k = next(it)
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, d.dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, d.dtype)
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else max(d.shape[-1], 1)
+        scale = d.scale if d.scale is not None else fan_in ** -0.5
+        return (jax.random.normal(k, d.shape, jnp.float32) * scale).astype(d.dtype)
+
+    return _tree_map_defs(make, defs)
+
+
+def param_specs(defs) -> Any:
+    return _tree_map_defs(lambda d: d.spec, defs)
+
+
+def abstract_params(defs) -> Any:
+    return _tree_map_defs(lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs)
+
+
+# ------------------------------------------------------------------ layers
+def rms_norm(w: jnp.ndarray, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., T, H, D) rotary over D; positions: (..., T)."""
+    D = x.shape[-1]
+    half = D // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs       # (..., T, half)
+    cos = jnp.cos(ang)[..., None, :]                             # (..., T, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(w_gate: jnp.ndarray, w_up: jnp.ndarray, w_down: jnp.ndarray,
+           x: jnp.ndarray) -> jnp.ndarray:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)

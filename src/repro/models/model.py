@@ -1,0 +1,252 @@
+"""Model: config -> params/specs, train forward, prefill, decode.
+
+One class serves all 10 assigned architectures; the family decides the block
+layout (DESIGN.md §5). The modality frontends of [audio]/[vlm] archs are
+stubs: seamless's encoder consumes precomputed frame embeddings; chameleon's
+VQ image tokens are ordinary vocab ids.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from .attention import KVCache
+from .layers import (DTYPES, ParamDef, abstract_params, constrain,
+                     init_params, param_specs, rms_norm)
+from .transformer import (block_apply, block_defs, init_block_cache,
+                          scan_blocks, stack_defs)
+
+__all__ = ["Model"]
+
+NEG = -1.0e30
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, *, tp: int = 1,
+                 batch_axes: tuple[str, ...] = ("data",),
+                 rwkv_chunk: int = 0, rwkv_sp: bool = False,
+                 moe_gathered: bool = False, moe_ep: bool = False,
+                 use_flash: bool = False):
+        self.cfg = cfg
+        self.tp = tp
+        self.batch_axes = batch_axes
+        self.rwkv_chunk = rwkv_chunk
+        self.rwkv_sp = rwkv_sp     # sequence-parallel RWKV stack (T > 1)
+        self.moe_gathered = moe_gathered   # gathered-experts MoE dispatch
+        self.moe_ep = moe_ep               # expert-parallel a2a dispatch
+        self.use_flash = use_flash         # blockwise/flash attention (T>1)
+        self.dtype = DTYPES[cfg.param_dtype]
+        self.v_pad = cfg.padded_vocab(tp)
+        self._defs = self._build_defs()
+
+    # ------------------------------------------------------------ params
+    def _kind(self) -> str:
+        return {"dense": "attn", "moe": "moe", "ssm": "rwkv",
+                "encdec": "attn", "hybrid": None}[self.cfg.family]
+
+    def _hybrid_layout(self):
+        pat = self.cfg.layer_pattern()
+        n_rep = self.cfg.n_layers // len(pat)
+        tail = self.cfg.n_layers - n_rep * len(pat)
+        return pat, n_rep, tail
+
+    def _build_defs(self) -> dict:
+        cfg, tp, dt = self.cfg, self.tp, self.dtype
+        d = cfg.d_model
+        defs: dict[str, Any] = {
+            "embed": ParamDef((self.v_pad, d), P("model", "data"), dt,
+                              scale=1.0),
+            "ln_f": ParamDef((d,), P(None), jnp.float32, "ones"),
+        }
+        if not cfg.tie_embeddings:
+            defs["unembed"] = ParamDef((d, self.v_pad), P("data", "model"), dt)
+        if cfg.family == "hybrid":
+            pat, n_rep, tail = self._hybrid_layout()
+            super_defs = {f"b{i}": block_defs(cfg, k, tp, dt)
+                          for i, k in enumerate(pat)}
+            defs["layers"] = stack_defs(n_rep, super_defs)
+            defs["tail"] = {f"t{i}": block_defs(cfg, pat[i % len(pat)], tp, dt)
+                            for i in range(tail)}
+        elif cfg.family == "encdec":
+            defs["enc_layers"] = stack_defs(
+                cfg.enc_layers, block_defs(cfg, "attn", tp, dt))
+            defs["enc_ln"] = ParamDef((d,), P(None), jnp.float32, "ones")
+            defs["layers"] = stack_defs(
+                cfg.n_layers, block_defs(cfg, "attn", tp, dt, cross=True))
+        else:
+            defs["layers"] = stack_defs(
+                cfg.n_layers, block_defs(cfg, self._kind(), tp, dt))
+        return defs
+
+    def init(self, key: jax.Array):
+        return init_params(key, self._defs)
+
+    def specs(self):
+        return param_specs(self._defs)
+
+    def abstract(self):
+        return abstract_params(self._defs)
+
+    # ------------------------------------------------------------ caches
+    def init_cache(self, batch: int, seq: int, dtype=None) -> dict:
+        cfg = self.cfg
+        dtype = dtype or self.dtype
+        stack = lambda n, c: jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n,) + a.shape), c)
+        if cfg.family == "hybrid":
+            pat, n_rep, tail = self._hybrid_layout()
+            sup = {f"b{i}": init_block_cache(cfg, k, batch, seq, dtype)
+                   for i, k in enumerate(pat)}
+            cache = {"layers": stack(n_rep, sup),
+                     "tail": {f"t{i}": init_block_cache(
+                         cfg, pat[i % len(pat)], batch, seq, dtype)
+                         for i in range(tail)}}
+        elif cfg.family == "encdec":
+            enc_t = seq // cfg.enc_seq_divisor
+            cache = {"layers": stack(cfg.n_layers, init_block_cache(
+                cfg, "attn", batch, seq, dtype, cross_seq=enc_t)),
+                "enc_out": jnp.zeros((batch, enc_t, cfg.d_model), dtype)}
+        else:
+            cache = {"layers": stack(cfg.n_layers, init_block_cache(
+                cfg, self._kind(), batch, seq, dtype))}
+        cache["index"] = jnp.zeros((), jnp.int32)
+        return cache
+
+    # ----------------------------------------------------------- forward
+    def _embed(self, params, tokens):
+        x = jnp.take(params["embed"], tokens, axis=0).astype(self.dtype)
+        return constrain(
+            x, P(self.batch_axes, None, None))
+
+    def _logits(self, params, x):
+        x = rms_norm(params["ln_f"], x, self.cfg.norm_eps)
+        w = (params["embed"].T if self.cfg.tie_embeddings
+             else params["unembed"])
+        logits = jnp.einsum("btd,dv->btv", x, w).astype(jnp.float32)
+        logits = jnp.where(jnp.arange(self.v_pad) < self.cfg.vocab,
+                           logits, NEG)
+        tp_ax = None if "model" in self.batch_axes else "model"
+        return constrain(
+            logits, P(self.batch_axes, None, tp_ax))
+
+    def _apply_fn(self, kind: str, positions, enc_out=None, causal=True):
+        def f(p, x, c):
+            return block_apply(p, x, cfg=self.cfg, kind=kind, tp=self.tp,
+                               positions=positions, cache=c, enc_out=enc_out,
+                               causal=causal, rwkv_chunk=self.rwkv_chunk,
+                               batch_axes=self.batch_axes,
+                               moe_gathered=self.moe_gathered,
+                               moe_ep=self.moe_ep, use_flash=self.use_flash)
+        return f
+
+    def _encode(self, params, enc_feats, remat):
+        B, Te, _ = enc_feats.shape
+        pos = jnp.broadcast_to(jnp.arange(Te), (B, Te))
+        x, _ = scan_blocks(params["enc_layers"], enc_feats.astype(self.dtype),
+                           self._apply_fn("attn", pos, causal=False),
+                           remat=remat)
+        return rms_norm(params["enc_ln"], x, self.cfg.norm_eps)
+
+    def forward(self, params, tokens, *, enc_feats=None, cache=None):
+        """tokens: (B, T). cache=None -> pure causal forward (train);
+        cache given -> fill-and-attend (prefill T>1 / decode T==1).
+        Returns (logits, new_cache)."""
+        cfg = self.cfg
+        B, T = tokens.shape
+        remat = cfg.remat and cache is None
+        index = cache["index"] if cache is not None else jnp.int32(0)
+        positions = index + jnp.broadcast_to(jnp.arange(T), (B, T))
+        x = self._embed(params, tokens)
+
+        enc_out = None
+        if cfg.family == "encdec":
+            if cache is not None and enc_feats is None:
+                enc_out = cache["enc_out"].astype(self.dtype)
+            else:
+                enc_out = self._encode(params, enc_feats, remat)
+
+        new_cache = dict(cache) if cache is not None else None
+        if cfg.family == "hybrid":
+            pat, n_rep, tail = self._hybrid_layout()
+
+            def sup_apply(p, x, c):
+                cs = {}
+                for i, k in enumerate(pat):
+                    x, c2 = block_apply(
+                        p[f"b{i}"], x, cfg=cfg, kind=k, tp=self.tp,
+                        positions=positions,
+                        cache=None if c is None else c[f"b{i}"],
+                        rwkv_chunk=self.rwkv_chunk,
+                        batch_axes=self.batch_axes)
+                    cs[f"b{i}"] = c2
+                return x, (cs if c is not None else None)
+
+            x, nc = scan_blocks(params["layers"], x, sup_apply,
+                                None if cache is None else cache["layers"],
+                                remat=remat)
+            if cache is not None:
+                new_cache["layers"] = nc
+            for i in range(tail):
+                k = pat[i % len(pat)]
+                c_i = None if cache is None else cache["tail"][f"t{i}"]
+                x, c2 = block_apply(params["tail"][f"t{i}"], x, cfg=cfg,
+                                    kind=k, tp=self.tp, positions=positions,
+                                    cache=c_i, batch_axes=self.batch_axes)
+                if cache is not None:
+                    new_cache["tail"][f"t{i}"] = c2
+        elif cfg.family == "ssm" and self.rwkv_sp and T > 1:
+            # sequence-parallel RWKV stack (models/rwkv_sp.py): T sharded
+            # over `model`, weights FSDP-gathered, state via prefix scan.
+            # Fresh-state only: train, or prefill into a zero cache.
+            from .layers import get_mesh
+            from .rwkv_sp import rwkv_stack_sp
+            from .transformer import block_defs, stack_defs
+            from .layers import param_specs
+            specs = param_specs(self._defs)["layers"]
+            out = rwkv_stack_sp(params["layers"], specs, x, cfg=cfg,
+                                mesh=get_mesh(), chunk=self.rwkv_chunk or 256,
+                                batch_axes=self.batch_axes, remat=remat,
+                                want_cache=cache is not None)
+            if cache is not None:
+                x, new_cache["layers"] = out
+            else:
+                x = out
+        else:
+            kind = self._kind()
+            x, nc = scan_blocks(
+                params["layers"], x,
+                self._apply_fn(kind, positions, enc_out=enc_out),
+                None if cache is None else cache["layers"], remat=remat)
+            if cache is not None:
+                new_cache["layers"] = nc
+
+        logits = self._logits(params, x)
+        if cache is not None:
+            new_cache["index"] = index + T
+            if cfg.family == "encdec" and enc_feats is not None:
+                new_cache["enc_out"] = enc_out.astype(
+                    cache["enc_out"].dtype)
+        return logits, new_cache
+
+    # ------------------------------------------------------------- steps
+    def loss(self, params, batch):
+        """batch: {"tokens": (B,T), "labels": (B,T)} (+ "enc_feats")."""
+        logits, _ = self.forward(params, batch["tokens"],
+                                 enc_feats=batch.get("enc_feats"))
+        labels = batch["labels"]
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, labels[..., None],
+                                     axis=-1)[..., 0]
+        return jnp.mean(lse - picked)
+
+    def prefill(self, params, tokens, cache, *, enc_feats=None):
+        return self.forward(params, tokens, enc_feats=enc_feats, cache=cache)
+
+    def decode_step(self, params, cache, tokens):
+        """tokens: (B, 1). Returns (logits (B,1,V), new_cache)."""
+        return self.forward(params, tokens, cache=cache)

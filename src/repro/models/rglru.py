@@ -1,0 +1,116 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block: x -> [branch1: linear -> causal depthwise conv(4) -> RG-LRU]
+           ⊙ gelu(branch2: linear) -> out-projection.
+
+RG-LRU (diagonal gated linear recurrence):
+    r_t = σ(W_a x_t + b_a)            recurrence gate
+    i_t = σ(W_i x_t + b_i)            input gate
+    a_t = exp(c · softplus(Λ) · (−r_t))   per-channel decay in (0,1)
+    h_t = a_t ⊙ h_{t−1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+The recurrence is diagonal ⇒ channel-shardable on `model` and evaluated with
+`jax.lax.associative_scan` (O(log T) depth — this is what makes long_500k
+prefill tractable, and the recurrence state is O(1) for decode).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from .layers import ParamDef, constrain
+
+__all__ = ["rglru_defs", "rglru_apply", "RGLRUState", "init_rglru_state"]
+
+C_FACTOR = 8.0
+
+
+class RGLRUState(NamedTuple):
+    h: jnp.ndarray          # (B, W) recurrent state
+    conv: jnp.ndarray       # (B, taps-1, W) conv lookback
+
+
+def rglru_defs(cfg: ModelConfig, tp: int, dtype) -> dict:
+    d = cfg.d_model
+    w = cfg.lru_dim or d
+    return {
+        "w_in": ParamDef((d, w), P("data", "model"), dtype),
+        "w_gate": ParamDef((d, w), P("data", "model"), dtype),
+        "conv": ParamDef((cfg.conv_width, w), P(None, "model"), dtype),
+        "w_a": ParamDef((w, w), P("data", "model"), dtype),
+        "w_i": ParamDef((w, w), P("data", "model"), dtype),
+        "b_a": ParamDef((w,), P("model"), jnp.float32, "zeros"),
+        "b_i": ParamDef((w,), P("model"), jnp.float32, "zeros"),
+        "lam": ParamDef((w,), P("model"), jnp.float32, "ones"),
+        "w_out": ParamDef((w, d), P("model", "data"), dtype),
+    }
+
+
+def init_rglru_state(batch: int, cfg: ModelConfig, dtype) -> RGLRUState:
+    w = cfg.lru_dim or cfg.d_model
+    return RGLRUState(jnp.zeros((batch, w), jnp.float32),
+                      jnp.zeros((batch, cfg.conv_width - 1, w), dtype))
+
+
+def _causal_conv(xw: jnp.ndarray, kernel: jnp.ndarray,
+                 lookback: jnp.ndarray | None):
+    """xw: (B, T, W); kernel: (taps, W) depthwise. Returns (y, new_lookback)."""
+    taps = kernel.shape[0]
+    if lookback is None:
+        lookback = jnp.zeros((xw.shape[0], taps - 1, xw.shape[2]), xw.dtype)
+    ext = jnp.concatenate([lookback, xw], axis=1)          # (B, T+taps-1, W)
+    y = sum(ext[:, i:i + xw.shape[1], :] * kernel[i] for i in range(taps))
+    return y, ext[:, -(taps - 1):, :]
+
+
+def _lru_scan(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray) -> jnp.ndarray:
+    """h_t = a_t h_{t-1} + b_t via associative scan. a, b: (B, T, W)."""
+    a0 = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+    b0 = jnp.concatenate([h0[:, None, :], b], axis=1)
+
+    def op(x, y):
+        ax, bx = x
+        ay, by = y
+        return ax * ay, bx * ay + by
+
+    _, h = jax.lax.associative_scan(op, (a0, b0), axis=1)
+    return h[:, 1:, :]
+
+
+def rglru_apply(params: dict, x: jnp.ndarray, *, cfg: ModelConfig,
+                state: RGLRUState | None = None,
+                batch_axes=("data",)) -> tuple[jnp.ndarray, RGLRUState | None]:
+    """x: (B, T, d) -> (B, T, d); state threaded for decode."""
+    B, T, d = x.shape
+    xw = jnp.einsum("btd,dw->btw", x, params["w_in"])
+    gate = jax.nn.gelu(jnp.einsum("btd,dw->btw", x, params["w_gate"]))
+    tp_ax = None if "model" in batch_axes else "model"
+    xw = constrain(xw, P(batch_axes, None, tp_ax))
+
+    conv_in = None if state is None else state.conv
+    xc, new_conv = _causal_conv(xw, params["conv"], conv_in)
+
+    xf = xc.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("btw,wv->btv", xf, params["w_a"].astype(jnp.float32)) + params["b_a"])
+    i = jax.nn.sigmoid(jnp.einsum("btw,wv->btv", xf, params["w_i"].astype(jnp.float32)) + params["b_i"])
+    log_a = -C_FACTOR * jax.nn.softplus(params["lam"]) * r     # (B, T, W) < 0
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-9)) * (i * xf)
+
+    h0 = jnp.zeros((B, a.shape[-1]), jnp.float32) if state is None else state.h
+    if T == 1 and state is not None:          # decode fast path
+        h = (a[:, 0] * h0 + b[:, 0])[:, None, :]
+    else:
+        h = _lru_scan(a, b, h0)
+
+    new_state = None
+    if state is not None:
+        new_state = RGLRUState(h[:, -1, :], new_conv)
+
+    y = (h.astype(x.dtype) * gate)
+    y = jnp.einsum("btw,wd->btd", y, params["w_out"])
+    return constrain(y, P(batch_axes, None, None)), new_state

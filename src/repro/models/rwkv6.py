@@ -1,0 +1,206 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free time mixing with
+data-dependent per-channel decay, plus squared-ReLU channel mixing.
+
+Time mixing (per head, head size N = cfg.rwkv_head_dim):
+    S_t = diag(w_t) S_{t−1} + k_t v_tᵀ            state (N_k × N_v)
+    y_t = (S_{t−1} + diag(u) k_t v_tᵀ)ᵀ r_t
+with w_t = exp(−exp(w0 + LoRA(x̃_t))) data-dependent decay, and token-shift
+interpolation x̃ = lerp(x_t, x_{t−1}, μ + LoRA) on every projection input.
+
+Two evaluation paths, equal to each other (tested):
+* `lax.scan` over time — the reference, O(T) sequential;
+* chunked parallel form — intra-chunk matmuls (MXU) + inter-chunk scan,
+  the performance path for train/prefill (§Perf hillclimb).
+
+The recurrence state is O(1) in sequence length ⇒ long_500k decode works.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from .layers import ParamDef, constrain
+
+__all__ = ["rwkv_defs", "rwkv_time_mix", "rwkv_channel_mix", "RWKVState",
+           "init_rwkv_state"]
+
+LORA_R = 32
+
+
+class RWKVState(NamedTuple):
+    wkv: jnp.ndarray       # (B, H, N, N) recurrent state
+    shift_t: jnp.ndarray   # (B, d) last token (time-mix input)
+    shift_c: jnp.ndarray   # (B, d) last token (channel-mix input)
+
+
+def rwkv_defs(cfg: ModelConfig, tp: int, dtype) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    r = LORA_R
+    return {
+        "time": {
+            "mu": ParamDef((5, d), P(None, "model"), jnp.float32, "zeros"),
+            "w_r": ParamDef((d, d), P("data", "model"), dtype),
+            "w_k": ParamDef((d, d), P("data", "model"), dtype),
+            "w_v": ParamDef((d, d), P("data", "model"), dtype),
+            "w_g": ParamDef((d, d), P("data", "model"), dtype),
+            "w_o": ParamDef((d, d), P("model", "data"), dtype),
+            "decay0": ParamDef((d,), P("model"), jnp.float32, "zeros"),
+            "decay_a": ParamDef((d, r), P("data", None), dtype),
+            "decay_b": ParamDef((r, d), P(None, "model"), dtype),
+            "bonus": ParamDef((d,), P("model"), jnp.float32, "zeros"),
+        },
+        "channel": {
+            "mu": ParamDef((2, d), P(None, "model"), jnp.float32, "zeros"),
+            "w_k": ParamDef((d, ff), P("data", "model"), dtype),
+            "w_v": ParamDef((ff, d), P("model", "data"), dtype),
+            "w_r": ParamDef((d, d), P("data", "model"), dtype),
+        },
+    }
+
+
+def init_rwkv_state(batch: int, cfg: ModelConfig, dtype) -> RWKVState:
+    d = cfg.d_model
+    n = cfg.rwkv_head_dim
+    h = d // n
+    return RWKVState(jnp.zeros((batch, h, n, n), jnp.float32),
+                     jnp.zeros((batch, d), dtype),
+                     jnp.zeros((batch, d), dtype))
+
+
+def _token_shift(x: jnp.ndarray, last: jnp.ndarray | None) -> jnp.ndarray:
+    """x_{t-1} sequence (first element from `last` or zeros)."""
+    first = jnp.zeros_like(x[:, :1]) if last is None else last[:, None, :]
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _wkv_scan(r, k, v, w, u, s0):
+    """Reference recurrence. r,k,v,w: (B, T, H, N); s0: (B, H, N, N)."""
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = jnp.einsum("bhi,bhj->bhij", k_t, v_t)
+        y = jnp.einsum("bhij,bhi->bhj", s + u[None, :, :, None] * kv, r_t)
+        s = w_t[..., None] * s + kv
+        return s, y
+
+    xs = jax.tree.map(lambda t: t.transpose(1, 0, 2, 3), (r, k, v, w))
+    s, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3), s
+
+
+def _wkv_chunked(r, k, v, w, u, s0, chunk: int):
+    """Chunked parallel form; exact (log-space cumulative decays)."""
+    B, T, H, N = r.shape
+    assert T % chunk == 0
+    nc = T // chunk
+    rs = r.reshape(B, nc, chunk, H, N)
+    ks = k.reshape(B, nc, chunk, H, N)
+    vs = v.reshape(B, nc, chunk, H, N)
+    logw = jnp.log(jnp.clip(w, 1e-38)).reshape(B, nc, chunk, H, N)
+    # cumulative decay within chunk: W_t = prod_{τ<=t} w_τ  (inclusive)
+    cum = jnp.cumsum(logw, axis=2)                       # (B,nc,L,H,N)
+    total = cum[:, :, -1]                                # (B,nc,H,N)
+
+    # Factored-exponential stability. The pairwise intra-chunk decay
+    # exp(excl_t − cum_τ) (≤ 1 always) is factored into two exponentials for
+    # the MXU matmul; each factor is re-centred by m0 = total/2 so its
+    # exponent stays within ±range/2, and clamped asymmetrically
+    # (UP=+30, LO=−80): whenever the true pair weight is representable the
+    # factorization is exact, and clamped outliers always round TOWARD ZERO
+    # (a pair with a factor beyond e^30 has partner ≤ e^{−range/2}, so the
+    # product lands below e^{30−range/2} ≪ its true ≤ 1 value — never above).
+    UP, LO = 30.0, -80.0
+
+    def chunk_step(s, inp):
+        rc, kc, vc, cumc, totc = inp                      # (B,L,H,N)...
+        # exclusive cumulative decay (decay applied to state before step t)
+        excl = jnp.concatenate([jnp.zeros_like(cumc[:, :1]), cumc[:, :-1]],
+                               axis=1)                    # (B,L,H,N)
+        m0 = 0.5 * totc[:, None]                          # (B,1,H,N)
+        # inter-chunk: y_inter_t = (r_t ⊙ exp(excl_t)) · S   (excl ≤ 0)
+        y_inter = jnp.einsum("blhi,bhij->blhj",
+                             rc * jnp.exp(jnp.clip(excl, LO, 0.0)), s)
+        # intra-chunk: pairs τ < t with decay exp(excl_t − cum_τ)
+        r_dec = rc * jnp.exp(jnp.clip(excl - m0, LO, UP))
+        k_dec = kc * jnp.exp(jnp.clip(m0 - cumc, LO, UP))
+        att = jnp.einsum("blhi,bmhi->bhlm", r_dec, k_dec)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        att = jnp.where(mask[None, None], att, 0.0)
+        y_intra = jnp.einsum("bhlm,bmhj->blhj", att, vc)
+        # bonus diagonal term: u ⊙ k_t
+        y_diag = jnp.einsum("blhi,blhi,blhj->blhj", rc,
+                            u[None, None] * kc, vc)
+        # state update: S' = diag(exp(total)) S + Σ_τ exp(total − cum_τ) k_τ v_τᵀ
+        k_carry = kc * jnp.exp(jnp.clip(totc[:, None] - cumc, LO, 0.0))
+        s_new = jnp.exp(totc)[..., None] * s + jnp.einsum(
+            "blhi,blhj->bhij", k_carry, vc)
+        return s_new, y_inter + y_intra + y_diag
+
+    xs = (rs.transpose(1, 0, 2, 3, 4), ks.transpose(1, 0, 2, 3, 4),
+          vs.transpose(1, 0, 2, 3, 4), cum.transpose(1, 0, 2, 3, 4),
+          total.transpose(1, 0, 2, 3))
+    s, ys = jax.lax.scan(chunk_step, s0, xs)
+    return ys.transpose(1, 0, 2, 3, 4).reshape(B, T, H, N), s
+
+
+def rwkv_time_mix(params: dict, x: jnp.ndarray, *, cfg: ModelConfig,
+                  state: RWKVState | None = None, chunk: int = 0,
+                  batch_axes=("data",)):
+    """x: (B, T, d). chunk > 0 selects the chunked parallel path (T % chunk == 0)."""
+    p = params["time"]
+    B, T, d = x.shape
+    n = cfg.rwkv_head_dim
+    h = d // n
+    dt = x.dtype
+
+    prev = _token_shift(x, None if state is None else state.shift_t)
+    mu = p["mu"].astype(dt)                               # (5, d)
+    xr, xk, xv, xg, xw = (x + (prev - x) * mu[i] for i in range(5))
+
+    r = jnp.einsum("btd,de->bte", xr, p["w_r"]).reshape(B, T, h, n)
+    k = jnp.einsum("btd,de->bte", xk, p["w_k"]).reshape(B, T, h, n)
+    v = jnp.einsum("btd,de->bte", xv, p["w_v"]).reshape(B, T, h, n)
+    g = jax.nn.silu(jnp.einsum("btd,de->bte", xg, p["w_g"]))
+
+    lora = jnp.einsum("btd,dr,re->bte", jnp.tanh(xw.astype(jnp.float32)),
+                      p["decay_a"].astype(jnp.float32),
+                      p["decay_b"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(p["decay0"] + lora)).reshape(B, T, h, n)
+    u = p["bonus"].reshape(h, n)
+
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    s0 = jnp.zeros((B, h, n, n), jnp.float32) if state is None else state.wkv
+    if chunk and T % chunk == 0 and T > 1:
+        y, s = _wkv_chunked(rf, kf, vf, w, u, s0, chunk)
+    else:
+        y, s = _wkv_scan(rf, kf, vf, w, u, s0)
+
+    y = (y.reshape(B, T, d).astype(dt)) * g
+    out = jnp.einsum("btd,de->bte", y, p["w_o"])
+    out = constrain(out, P(batch_axes, None, None))
+    new_state = None
+    if state is not None:
+        new_state = state._replace(wkv=s, shift_t=x[:, -1, :])
+    return out, new_state
+
+
+def rwkv_channel_mix(params: dict, x: jnp.ndarray, *, cfg: ModelConfig,
+                     state: RWKVState | None = None,
+                     batch_axes=("data",)):
+    p = params["channel"]
+    prev = _token_shift(x, None if state is None else state.shift_c)
+    mu = p["mu"].astype(x.dtype)
+    xk = x + (prev - x) * mu[0]
+    xr = x + (prev - x) * mu[1]
+    k = jnp.einsum("btd,df->btf", xk, p["w_k"])
+    kk = jnp.square(jax.nn.relu(k))
+    v = jnp.einsum("btf,fd->btd", kk, p["w_v"])
+    r = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["w_r"]))
+    out = r * v
+    new_state = None
+    if state is not None:
+        new_state = state._replace(shift_c=x[:, -1, :])
+    return constrain(out, P(batch_axes, None, None)), new_state

@@ -1,0 +1,179 @@
+"""Block assembly: per-family residual blocks, stacked-and-scanned layers.
+
+Scan-over-layers keeps compile time and HLO size O(1) in depth (essential for
+the 126-layer dry-runs); hybrid patterns scan over the repeating superblock
+(recurrentgemma: (rglru, rglru, attn) × 12 + 2 tail rglru blocks).
+Remat (full activation checkpointing) wraps the scanned body for train mode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from .attention import KVCache, attention, attn_defs, attn_dims, init_kv_cache
+from .layers import ParamDef, swiglu
+from .moe import moe_apply, moe_defs
+from .rglru import RGLRUState, init_rglru_state, rglru_apply, rglru_defs
+from .rwkv6 import (RWKVState, init_rwkv_state, rwkv_channel_mix, rwkv_defs,
+                    rwkv_time_mix)
+
+__all__ = ["block_defs", "block_apply", "stack_defs", "scan_blocks",
+           "init_block_cache"]
+
+
+def _norm_def(d: int) -> ParamDef:
+    return ParamDef((d,), P(None), jnp.float32, "ones")
+
+
+def mlp_defs(cfg: ModelConfig, dtype) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": ParamDef((d, ff), P("data", "model"), dtype),
+        "w_up": ParamDef((d, ff), P("data", "model"), dtype),
+        "w_down": ParamDef((ff, d), P("model", "data"), dtype),
+    }
+
+
+def block_defs(cfg: ModelConfig, kind: str, tp: int, dtype,
+               cross: bool = False) -> dict:
+    """kind: attn | moe | rglru | rwkv. cross adds encoder cross-attention."""
+    d = cfg.d_model
+    if kind == "rwkv":
+        return {"ln1": _norm_def(d), "ln2": _norm_def(d),
+                **rwkv_defs(cfg, tp, dtype)}
+    defs: dict[str, Any] = {"ln1": _norm_def(d), "ln2": _norm_def(d)}
+    if kind == "attn":
+        defs["attn"] = attn_defs(cfg, tp, dtype)
+        defs["mlp"] = mlp_defs(cfg, dtype)
+    elif kind == "moe":
+        defs["attn"] = attn_defs(cfg, tp, dtype)
+        defs["moe"] = moe_defs(cfg, tp, dtype)
+    elif kind == "rglru":
+        defs["rglru"] = rglru_defs(cfg, tp, dtype)
+        defs["mlp"] = mlp_defs(cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if cross:
+        defs["ln_x"] = _norm_def(d)
+        defs["xattn"] = attn_defs(cfg, tp, dtype)
+    return defs
+
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int, seq: int,
+                     dtype, cross_seq: int = 0) -> Any:
+    if kind in ("attn", "moe"):
+        self_c = init_kv_cache(batch, seq, cfg, dtype)
+        if cross_seq:
+            # cross-attention K/V: computed once at prefill, read at decode
+            return {"self": self_c,
+                    "x": init_kv_cache(batch, cross_seq, cfg, dtype)}
+        return self_c
+    if kind == "rglru":
+        return init_rglru_state(batch, cfg, dtype)
+    if kind == "rwkv":
+        return init_rwkv_state(batch, cfg, dtype)
+    raise ValueError(kind)
+
+
+def block_apply(params: dict, x: jnp.ndarray, *, cfg: ModelConfig, kind: str,
+                tp: int, positions: jnp.ndarray, cache: Any = None,
+                enc_out: jnp.ndarray | None = None, causal: bool = True,
+                rwkv_chunk: int = 0, batch_axes=("data",),
+                moe_gathered: bool = False,
+                moe_ep: bool = False,
+                use_flash: bool = False) -> tuple[jnp.ndarray, Any]:
+    """One residual block. Returns (x, new_cache)."""
+    from .layers import rms_norm
+    dims = attn_dims(cfg, tp) if kind != "rwkv" else None
+    new_cache = cache
+
+    if kind == "rwkv":
+        h, new_cache = rwkv_time_mix(params, rms_norm(params["ln1"], x, cfg.norm_eps),
+                                     cfg=cfg, state=cache, chunk=rwkv_chunk,
+                                     batch_axes=batch_axes)
+        x = x + h
+        h, new_cache = rwkv_channel_mix(params, rms_norm(params["ln2"], x, cfg.norm_eps),
+                                        cfg=cfg, state=new_cache,
+                                        batch_axes=batch_axes)
+        return x + h, new_cache
+
+    if kind in ("attn", "moe"):
+        window = cfg.window if (cfg.family == "hybrid") else 0
+        self_cache = cache["self"] if isinstance(cache, dict) else cache
+        h, new_self = attention(params["attn"], rms_norm(params["ln1"], x, cfg.norm_eps),
+                                cfg=cfg, dims=dims, positions=positions,
+                                cache=self_cache, causal=causal, window=window,
+                                batch_axes=batch_axes, use_flash=use_flash)
+        new_cache = ({"self": new_self, "x": cache["x"]}
+                     if isinstance(cache, dict) else new_self)
+        x = x + h
+    elif kind == "rglru":
+        h, new_cache = rglru_apply(params["rglru"], rms_norm(params["ln1"], x, cfg.norm_eps),
+                                   cfg=cfg, state=cache, batch_axes=batch_axes)
+        x = x + h
+
+    if enc_out is not None and "xattn" in params:
+        x_kv = cache.get("x") if isinstance(cache, dict) else None
+        h, new_x = attention(params["xattn"], rms_norm(params["ln_x"], x, cfg.norm_eps),
+                             cfg=cfg, dims=dims, positions=positions,
+                             kv_x=enc_out, static_kv=x_kv, causal=False,
+                             batch_axes=batch_axes)
+        if isinstance(new_cache, dict) and x_kv is not None:
+            new_cache = {**new_cache, "x": new_x}
+        x = x + h
+
+    xn = rms_norm(params["ln2"], x, cfg.norm_eps)
+    if kind == "moe":
+        if moe_ep and x.shape[1] > 1:        # train & prefill (not decode)
+            # expert-parallel a2a path (§Perf): experts resident, tokens move
+            from .layers import get_mesh
+            from .moe import moe_apply_ep
+            h = moe_apply_ep(params["moe"], xn, cfg=cfg,
+                             mesh=get_mesh(), batch_axes=batch_axes)
+        elif moe_gathered and x.shape[1] > 1:
+            # gathered-experts path (§Perf): local dispatch, FSDP weights
+            from .layers import get_mesh
+            from .moe import moe_apply_gathered
+            h = moe_apply_gathered(params["moe"], xn, cfg=cfg,
+                                   mesh=get_mesh(), batch_axes=batch_axes)
+        else:
+            h = moe_apply(params["moe"], xn, cfg=cfg, tp=tp,
+                          batch_axes=batch_axes)
+    else:
+        h = swiglu(params["mlp"]["w_gate"], params["mlp"]["w_up"],
+                   params["mlp"]["w_down"], xn)
+    return x + h, new_cache
+
+
+# ------------------------------------------------------------ layer stacking
+def stack_defs(n: int, defs) -> Any:
+    """Prepend a layer axis to every ParamDef (unsharded, scanned)."""
+    def f(d: ParamDef):
+        return ParamDef((n,) + d.shape, P(*((None,) + tuple(d.spec))),
+                        d.dtype, d.init, d.scale)
+    return jax.tree.map(f, defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def scan_blocks(params_stacked, x: jnp.ndarray, apply_fn, cache_stacked=None,
+                remat: bool = True):
+    """Run a stack of identical blocks with lax.scan.
+
+    apply_fn(layer_params, x, layer_cache) -> (x, new_layer_cache).
+    """
+    has_cache = cache_stacked is not None
+
+    def body(carry, layer):
+        p, c = layer if has_cache else (layer, None)
+        y, c2 = apply_fn(p, carry, c)
+        return y, (c2 if has_cache else None)
+
+    if remat:
+        body = jax.checkpoint(body)
+    xs = (params_stacked, cache_stacked) if has_cache else params_stacked
+    x, new_cache = jax.lax.scan(body, x, xs)
+    return x, (new_cache if has_cache else None)

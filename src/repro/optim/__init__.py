@@ -1,0 +1,8 @@
+from .adamw import (AdamWConfig, OptState, adamw_init, adamw_update,
+                    opt_state_specs)
+from .grad_compress import CompressState, compress_grads, compress_init
+from .schedule import warmup_cosine
+
+__all__ = ["AdamWConfig", "OptState", "adamw_init", "adamw_update",
+           "opt_state_specs", "CompressState", "compress_grads",
+           "compress_init", "warmup_cosine"]

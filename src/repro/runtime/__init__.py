@@ -1,0 +1,5 @@
+from .elastic import remesh_plan, reshard_tree
+from .straggler import StragglerPolicy, rebalance_chains
+
+__all__ = ["remesh_plan", "reshard_tree", "StragglerPolicy",
+           "rebalance_chains"]

@@ -1,0 +1,52 @@
+"""Elastic scaling: checkpoints are topology-free (host numpy), so a job can
+restart on a different device count. This module plans the new mesh and
+re-places state.
+
+At 1000+ nodes the failure model is: a pod (or slice) drops out, the job
+controller restarts the program on the surviving slices, `remesh_plan` picks
+the largest usable mesh, and `restore_checkpoint(..., shardings=...)`
+re-shards every array onto it. MCMC chains (BN workload) are re-balanced by
+runtime.straggler; LM training adjusts gradient accumulation to preserve the
+global batch.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["remesh_plan", "reshard_tree", "accum_steps_for_batch"]
+
+
+def remesh_plan(n_devices: int, *, model_parallel: int,
+                prefer_pods: int = 1) -> tuple[tuple[int, ...], tuple[str, ...]]:
+    """Largest (pod, data, model) factorization that fits n_devices.
+
+    model_parallel is fixed by the arch config (param shards must divide
+    evenly); the data/pod axes absorb whatever is left — that is the elastic
+    dimension.
+    """
+    if n_devices % model_parallel:
+        raise ValueError(f"{n_devices} devices not divisible by "
+                         f"model_parallel={model_parallel}")
+    rest = n_devices // model_parallel
+    pods = prefer_pods if rest % prefer_pods == 0 else 1
+    data = rest // pods
+    if pods > 1:
+        return (pods, data, model_parallel), ("pod", "data", "model")
+    return (data, model_parallel), ("data", "model")
+
+
+def reshard_tree(tree, specs, mesh):
+    """Place a host tree onto `mesh` with the given PartitionSpecs."""
+    def place(x, spec):
+        return jax.device_put(x, NamedSharding(mesh, spec))
+    return jax.tree.map(place, tree, specs)
+
+
+def accum_steps_for_batch(global_batch: int, per_step_batch: int) -> int:
+    """Gradient-accumulation factor preserving global batch after shrink."""
+    if global_batch % per_step_batch:
+        raise ValueError("global batch must remain divisible")
+    return global_batch // per_step_batch

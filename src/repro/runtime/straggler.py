@@ -1,0 +1,66 @@
+"""Straggler mitigation.
+
+The BN workload is MCMC: chains are statistically independent, so the system
+never *waits* for a slow worker at a correctness barrier. Sync points (the
+periodic best-graph exchange) are max-reductions — dropping a straggler's
+contribution biases nothing (the running best is monotone); a late
+contribution merges at the next exchange.
+
+Policy implemented here:
+* a chain that misses `patience` consecutive exchanges is declared straggling;
+* its slot is re-seeded by *cloning* the current best chain with a fresh PRNG
+  key (chain cloning is the MCMC analogue of speculative re-execution);
+* for LM training the analogue hook is backup-worker dispatch, which the
+  launcher exposes as `backup_factor` (redundant data-parallel replicas of the
+  slowest shard group — documented, not exercised on 1 CPU).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["StragglerPolicy", "rebalance_chains"]
+
+
+@dataclass
+class StragglerPolicy:
+    patience: int = 2            # missed exchanges before re-seed
+    backup_factor: float = 0.0   # fraction of redundant DP replicas (LM path)
+
+
+def rebalance_chains(key: jax.Array, states, progressed: np.ndarray,
+                     missed: np.ndarray, policy: StragglerPolicy):
+    """Clone the best chain into straggler slots.
+
+    states: stacked ChainState (leading axis = chains); progressed: bool (C,)
+    whether a chain reported this round; missed: int (C,) consecutive misses.
+    Returns (new_states, new_missed).
+    """
+    missed = np.where(progressed, 0, missed + 1)
+    lagging = missed >= policy.patience
+    if not lagging.any():
+        return states, missed
+    best = int(np.argmax(np.asarray(states.best_score)))
+    n = len(missed)
+    keys = jax.random.split(key, n)
+
+    def fix(leaf):
+        leaf = np.asarray(leaf)
+        src = leaf[best]
+        out = leaf.copy()
+        out[lagging] = src
+        return jnp.asarray(out)
+
+    # typed PRNG keys are not numpy-convertible: clone via key_data
+    new_states = jax.tree.map(fix, states._replace(
+        key=jax.random.key_data(states.key)))
+    # fresh keys so clones diverge immediately
+    new_keys = np.array(new_states.key)          # writable copy
+    new_keys[lagging] = np.asarray(jax.random.key_data(keys))[lagging]
+    new_states = new_states._replace(
+        key=jax.random.wrap_key_data(jnp.asarray(new_keys)))
+    missed = np.where(lagging, 0, missed)
+    return new_states, missed

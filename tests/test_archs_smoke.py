@@ -1,0 +1,141 @@
+"""Per-arch smoke tests (deliverable f): reduced family-preserving configs,
+one forward/train step + one decode step on CPU; output shapes + no NaNs.
+
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct, no
+allocation) — see launch/dryrun.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import Model
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+B, T = 2, 16
+
+
+def _batch(cfg, key):
+    ks = jax.random.split(key, 3)
+    tok = jax.random.randint(ks[0], (B, T), 0, cfg.vocab)
+    lab = jax.random.randint(ks[1], (B, T), 0, cfg.vocab)
+    batch = {"tokens": tok, "labels": lab}
+    if cfg.family == "encdec":
+        batch["enc_feats"] = jax.random.normal(
+            ks[2], (B, T // cfg.enc_seq_divisor, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.fixture(scope="module", params=ARCH_IDS)
+def arch_setup(request):
+    cfg = get_config(request.param).reduced()
+    if cfg.family == "moe":
+        # lossless capacity so prefill+decode == forward exactly (capacity
+        # dropping itself is covered by test_moe_capacity_drops)
+        import dataclasses
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
+    model = Model(cfg, tp=1)
+    params = model.init(jax.random.key(0))
+    return request.param, cfg, model, params
+
+
+def test_moe_capacity_drops():
+    """With capacity_factor ~0, every token is dropped -> MoE output is the
+    dense residual only (arctic) or zero (granite-moe)."""
+    import dataclasses
+    from repro.models.moe import moe_apply
+    cfg = dataclasses.replace(get_config("granite-moe-3b-a800m").reduced(),
+                              capacity_factor=0.0)
+    model = Model(cfg, tp=1)
+    params = model.init(jax.random.key(0))
+    # capacity floor is 8: use enough tokens that > 8 land on one expert
+    x = jax.random.normal(jax.random.key(1), (4, 64, cfg.d_model), jnp.float32)
+    blk = jax.tree.map(lambda a: a[0], params["layers"])
+    y_low = moe_apply(blk["moe"], x, cfg=cfg, tp=1)
+    cfg_hi = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
+    y_hi = moe_apply(blk["moe"], x, cfg=cfg_hi, tp=1)
+    # low capacity must actually change (drop) some token outputs
+    assert bool(jnp.any(jnp.abs(y_low - y_hi) > 1e-6))
+
+
+def test_forward_shapes_and_finite(arch_setup):
+    arch, cfg, model, params = arch_setup
+    batch = _batch(cfg, jax.random.key(1))
+    logits, _ = jax.jit(model.forward)(
+        params, batch["tokens"], enc_feats=batch.get("enc_feats"))
+    assert logits.shape == (B, T, model.v_pad)
+    real = logits[:, :, :cfg.vocab]
+    assert np.isfinite(np.asarray(real, np.float32)).all(), f"{arch}: NaN/inf logits"
+
+
+def test_train_step_decreases_nothing_nan(arch_setup):
+    arch, cfg, model, params = arch_setup
+    batch = _batch(cfg, jax.random.key(2))
+    opt = adamw_init(params, AdamWConfig())
+
+    @jax.jit
+    def step(params, opt, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        params, opt, m = adamw_update(grads, opt, params, AdamWConfig(lr=1e-3))
+        return params, opt, loss
+
+    params2, opt, loss = step(params, opt, batch)
+    assert np.isfinite(float(loss)), f"{arch}: loss={loss}"
+    # params actually moved
+    moved = jax.tree.reduce(
+        lambda a, b: a or b,
+        jax.tree.map(lambda a, b: bool(jnp.any(a != b)), params, params2))
+    assert moved, f"{arch}: optimizer step was a no-op"
+    # a loss near ln(vocab) for random init (weak sanity bound)
+    assert float(loss) < 2.0 * np.log(cfg.vocab)
+
+
+def test_prefill_then_decode_matches_forward(arch_setup):
+    """KV-cache/state correctness: prefill T−1 tokens then decode one step
+    must reproduce the pure forward logits at the last position."""
+    arch, cfg, model, params = arch_setup
+    batch = _batch(cfg, jax.random.key(3))
+    tok = batch["tokens"]
+    enc = batch.get("enc_feats")
+
+    full, _ = jax.jit(model.forward)(params, tok, enc_feats=enc)
+
+    cache = model.init_cache(B, T, dtype=jnp.float32)
+    logits_p, cache = jax.jit(model.prefill)(
+        params, tok[:, : T - 1], cache, enc_feats=enc)
+    logits_d, cache = jax.jit(model.decode_step)(
+        params, cache, tok[:, T - 1:])
+    assert logits_d.shape == (B, 1, model.v_pad)
+    assert int(cache["index"]) == T
+
+    a = np.asarray(full[:, -1, : cfg.vocab], np.float32)
+    b = np.asarray(logits_d[:, 0, : cfg.vocab], np.float32)
+    np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-3,
+                               err_msg=f"{arch}: decode != forward")
+
+
+def test_full_config_matches_assignment():
+    """The full configs carry the exact assigned hyperparameters."""
+    expect = {
+        "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+        "command-r-plus-104b": (64, 12288, 96, 8, 33792, 256000),
+        "yi-34b": (60, 7168, 56, 8, 20480, 64000),
+        "llama3-405b": (126, 16384, 128, 8, 53248, 128256),
+        "granite-20b": (52, 6144, 48, 1, 24576, 49152),
+        "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+        "granite-moe-3b-a800m": (32, 1536, 24, 8, 512, 49155),
+        "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+        "chameleon-34b": (48, 8192, 64, 8, 22016, 65536),
+        "rwkv6-7b": (32, 4096, 0, 0, 14336, 65536),
+    }
+    for arch, (L, d, h, kv, ff, v) in expect.items():
+        c = get_config(arch)
+        got = (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab)
+        assert got == (L, d, h, kv, ff, v), f"{arch}: {got}"
+    # MoE extras
+    assert get_config("granite-moe-3b-a800m").n_experts == 40
+    assert get_config("granite-moe-3b-a800m").experts_top_k == 8
+    assert get_config("arctic-480b").n_experts == 128
+    assert get_config("arctic-480b").experts_top_k == 2
+    assert get_config("arctic-480b").moe_dense_residual

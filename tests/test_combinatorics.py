@@ -1,0 +1,79 @@
+import itertools
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as hst
+
+from repro.core.combinatorics import (build_pst, candidates_to_nodes,
+                                      n_parent_sets, nodes_to_candidates,
+                                      rank_combination, rank_parent_set,
+                                      size_offsets, unrank_combination)
+
+
+@pytest.mark.parametrize("n,k", [(5, 2), (7, 3), (8, 4), (6, 1), (4, 4)])
+def test_unrank_matches_itertools(n, k):
+    combos = list(itertools.combinations(range(n), k))
+    for l, c in enumerate(combos):
+        assert tuple(unrank_combination(n, k, l)) == c
+
+
+@given(hst.integers(2, 12), hst.integers(1, 4), hst.data())
+@settings(max_examples=200, deadline=None)
+def test_rank_unrank_roundtrip(n, k, data):
+    k = min(k, n)
+    l = data.draw(hst.integers(0, math.comb(n, k) - 1))
+    c = unrank_combination(n, k, l)
+    assert rank_combination(n, c) == l
+    assert np.all(np.diff(c) > 0)  # strictly increasing
+    assert 0 <= c[0] and c[-1] < n
+
+
+def test_unrank_out_of_range():
+    with pytest.raises(ValueError):
+        unrank_combination(5, 2, math.comb(5, 2))
+
+
+@pytest.mark.parametrize("nc,s", [(6, 4), (10, 3), (5, 2), (12, 4)])
+def test_pst_complete_and_ordered(nc, s):
+    pst, sizes = build_pst(nc, s)
+    S = n_parent_sets(nc, s)
+    assert pst.shape == (S, s)
+    assert sizes.shape == (S,)
+    # paper's example: n=6 candidates, s=4 -> S=57
+    if (nc, s) == (6, 4):
+        assert S == 57
+    seen = set()
+    off = size_offsets(nc, s)
+    for i in range(S):
+        row = tuple(pst[i][pst[i] >= 0].tolist())
+        assert len(row) == sizes[i]
+        assert row not in seen
+        seen.add(row)
+        # rank is the inverse of the table position
+        assert rank_parent_set(nc, s, np.asarray(row, np.int64)) == i
+    # block boundaries by size
+    assert np.all(np.diff(sizes) >= 0)
+    for k in range(s + 1):
+        assert (sizes == k).sum() == math.comb(nc, k)
+        assert off[k + 1] - off[k] == math.comb(nc, k)
+
+
+@given(hst.integers(2, 20), hst.data())
+@settings(max_examples=100, deadline=None)
+def test_candidate_node_mapping_bijection(n, data):
+    node = data.draw(hst.integers(0, n - 1))
+    cands = np.arange(n - 1)
+    nodes = candidates_to_nodes(cands, node)
+    assert node not in set(nodes.tolist())
+    assert len(set(nodes.tolist())) == n - 1
+    back = nodes_to_candidates(nodes, node)
+    np.testing.assert_array_equal(back, cands)
+
+
+def test_pst_memory_matches_paper_figure():
+    # Paper Fig. 6(b): 60-node graph, s=4 -> ~7.99 MB PST.
+    S = n_parent_sets(59, 4)
+    mb = S * 4 * 4 / 2**20  # S rows x 4 int32
+    assert 7.0 < mb < 9.0

@@ -1,0 +1,103 @@
+"""Validate the trip-count-aware HLO cost analyzer (launch/hlo_cost.py).
+
+The critical property: a scanned loop must cost the same as its unrolled
+equivalent (XLA's own cost_analysis fails this — it counts while bodies once).
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_cost import analyze_hlo
+
+L, M, K = 10, 64, 64
+
+
+def _cost(fn, *args):
+    c = jax.jit(fn).lower(*args).compile()
+    return analyze_hlo(c.as_text(), n_devices=1)
+
+
+@pytest.fixture(scope="module")
+def wx():
+    w = jnp.zeros((L, M, K), jnp.float32)
+    x = jnp.zeros((8, M), jnp.float32)
+    return w, x
+
+
+def test_scan_matches_unrolled_flops(wx):
+    w, x = wx
+
+    def scanned(w, x):
+        x, _ = jax.lax.scan(lambda x, wl: (jnp.tanh(x @ wl), None), x, w)
+        return x
+
+    def unrolled(w, x):
+        for i in range(L):
+            x = jnp.tanh(x @ w[i])
+        return x
+
+    cs, cu = _cost(scanned, w, x), _cost(unrolled, w, x)
+    assert cs.loops and cs.loops[0][1] == L
+    assert not cs.unknown_loops
+    # dominant dot flops must agree within the elementwise noise (~1%)
+    assert cs.flops == pytest.approx(cu.flops, rel=0.05)
+
+
+def test_dot_flops_analytic():
+    a = jnp.zeros((32, 128), jnp.float32)
+    b = jnp.zeros((128, 16), jnp.float32)
+    c = _cost(lambda a, b: a @ b, a, b)
+    assert c.flops == pytest.approx(2 * 32 * 128 * 16, rel=0.01)
+
+
+def test_batched_dot_flops():
+    a = jnp.zeros((4, 32, 128), jnp.float32)
+    b = jnp.zeros((4, 128, 16), jnp.float32)
+    c = _cost(lambda a, b: jnp.einsum("bmk,bkn->bmn", a, b), a, b)
+    assert c.flops == pytest.approx(2 * 4 * 32 * 128 * 16, rel=0.01)
+
+
+def test_nested_scan_multiplies():
+    def fn(w, x):
+        def outer(x, wl):
+            def inner(x, _):
+                return jnp.tanh(x @ wl), None
+            x, _ = jax.lax.scan(inner, x, None, length=7)
+            return x, None
+        x, _ = jax.lax.scan(outer, x, w)
+        return x
+
+    w = jnp.zeros((5, M, M), jnp.float32)
+    x = jnp.zeros((8, M), jnp.float32)
+    c = _cost(fn, w, x)
+    assert c.flops == pytest.approx(5 * 7 * 2 * 8 * M * M, rel=0.05)
+
+
+def test_scan_with_nested_tuple_carry():
+    """KV-cache-like carries give the while op a nested-tuple type; the
+    parser must still find the loop (regression: silently skipped)."""
+    def fn(w, x):
+        def body(carry, wl):
+            x, (a, b) = carry
+            x = jnp.tanh(x @ wl)
+            return (x, (a + 1, b * 2.0)), None
+        carry, _ = jax.lax.scan(body, (x, (jnp.int32(0), jnp.float32(1))), w)
+        return carry[0]
+
+    w = jnp.zeros((L, M, M), jnp.float32)
+    x = jnp.zeros((8, M), jnp.float32)
+    c = _cost(fn, w, x)
+    assert c.loops and c.loops[0][1] == L
+    assert c.flops == pytest.approx(L * 2 * 8 * M * M, rel=0.05)
+
+
+def test_bytes_nonzero_and_scale_with_trip(wx):
+    w, x = wx
+
+    def scanned(w, x):
+        x, _ = jax.lax.scan(lambda x, wl: (jnp.tanh(x @ wl), None), x, w)
+        return x
+
+    c = _cost(scanned, w, x)
+    # each iteration reads at least one (M, K) weight slice
+    assert c.bytes >= L * M * K * 4

@@ -1,0 +1,150 @@
+"""Per-kernel validation: shape/dtype sweeps vs the ref.py pure-jnp oracles,
+all in interpret mode (CPU container; TPU is the target)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as hst
+
+from repro.core import build_score_table, random_cpts, random_dag
+from repro.core.order_scoring import score_order_ref
+from repro.data import ancestral_sample
+from repro.kernels import count_contingency, flash_attention, order_score
+from repro.kernels.count.ops import encode_parent_configs
+from repro.kernels.count.ref import count_ref
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.order_score.ref import order_score_ref as kernel_ref
+
+
+# ---------------------------------------------------------------- order_score
+@pytest.fixture(scope="module")
+def score_problem():
+    rng = np.random.default_rng(0)
+    adj = random_dag(rng, 10, 3, 0.4)
+    cpts = random_cpts(rng, adj, 3)
+    data = ancestral_sample(rng, adj, cpts, 500, 3)
+    return build_score_table(data, q=3, s=3)
+
+
+@pytest.mark.parametrize("block_s", [8, 32, 128, 1024])
+def test_order_score_block_sweep(score_problem, block_s):
+    st = score_problem
+    rng = np.random.default_rng(7)
+    for _ in range(3):
+        pos = jnp.asarray(rng.permutation(st.n).astype(np.int32))
+        sc, idx, ls = order_score(st.table, st.pst, pos, block_s=block_s,
+                                  interpret=True)
+        rv, ri = kernel_ref(st.table, st.pst, pos)
+        np.testing.assert_allclose(float(sc), float(rv.sum()), rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(idx), np.asarray(ri))
+        np.testing.assert_allclose(np.asarray(ls), np.asarray(rv), rtol=1e-6)
+
+
+@pytest.mark.parametrize("n,s,q", [(5, 2, 2), (8, 4, 2), (12, 3, 3)])
+def test_order_score_shape_sweep(n, s, q):
+    rng = np.random.default_rng(n * 7 + s)
+    adj = random_dag(rng, n, s, 0.4)
+    cpts = random_cpts(rng, adj, q)
+    data = ancestral_sample(rng, adj, cpts, 200, q)
+    st = build_score_table(data, q=q, s=s)
+    pos = jnp.asarray(rng.permutation(n).astype(np.int32))
+    sc, idx, _ = order_score(st.table, st.pst, pos, block_s=64, interpret=True)
+    want, widx, _ = score_order_ref(st.table, st.pst, pos)  # core oracle
+    np.testing.assert_allclose(float(sc), float(want), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(widx))
+
+
+def test_order_score_kernel_agrees_with_core_scorer(score_problem):
+    """The kernel is a drop-in for core.order_scoring (same MCMC contract)."""
+    st = score_problem
+    pos = jnp.asarray(np.arange(st.n, dtype=np.int32))
+    a = order_score(st.table, st.pst, pos, interpret=True)
+    b = score_order_ref(st.table, st.pst, pos)
+    np.testing.assert_allclose(float(a[0]), float(b[0]), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+
+# ---------------------------------------------------------------------- count
+@pytest.mark.parametrize("q,s,m,C,block_m", [
+    (2, 2, 100, 5, 64), (3, 3, 257, 9, 128), (3, 4, 512, 3, 256),
+    (4, 2, 64, 17, 64),
+])
+def test_count_sweep(q, s, m, C, block_m):
+    rng = np.random.default_rng(q * 100 + s)
+    n = 6
+    D = rng.integers(0, q, (m, n)).astype(np.int32)
+    data_ext = jnp.asarray(np.concatenate([D, np.zeros((m, 1), np.int32)], 1))
+    pcols = jnp.asarray(rng.integers(0, n + 1, (C, s)).astype(np.int32))
+    child = data_ext[:, 2]
+    got = count_contingency(data_ext, child, pcols, q=q, s=s,
+                            block_m=block_m, interpret=True)
+    codes = encode_parent_configs(data_ext, pcols, q)
+    want = count_ref(codes, jax.nn.one_hot(child, q, dtype=jnp.float32),
+                     Q=q ** s)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+    # counts sum to m per parent set
+    np.testing.assert_allclose(np.asarray(got).sum(axis=(1, 2)), m, atol=1e-4)
+
+
+@given(hst.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_count_property_total_mass(seed):
+    rng = np.random.default_rng(seed)
+    q, s, m, C = 3, 2, 128, 4
+    D = rng.integers(0, q, (m, 5)).astype(np.int32)
+    data_ext = jnp.asarray(np.concatenate([D, np.zeros((m, 1), np.int32)], 1))
+    pcols = jnp.asarray(rng.integers(0, 6, (C, s)).astype(np.int32))
+    got = count_contingency(data_ext, data_ext[:, 0], pcols, q=q, s=s,
+                            block_m=128, interpret=True)
+    assert np.asarray(got).min() >= 0
+    np.testing.assert_allclose(np.asarray(got).sum(axis=(1, 2)), m, atol=1e-4)
+
+
+# ------------------------------------------------------------ flash attention
+def _ref_gqa(q, k, v, causal):
+    B, T, Hq, Dh = q.shape
+    rep = Hq // k.shape[2]
+    kr = jnp.repeat(k, rep, 2) if rep > 1 else k
+    vr = jnp.repeat(v, rep, 2) if rep > 1 else v
+    out = attention_ref(q.transpose(0, 2, 1, 3).reshape(B * Hq, T, Dh),
+                        kr.transpose(0, 2, 1, 3).reshape(B * Hq, -1, Dh),
+                        vr.transpose(0, 2, 1, 3).reshape(B * Hq, -1, Dh),
+                        causal=causal)
+    return out.reshape(B, Hq, T, Dh).transpose(0, 2, 1, 3)
+
+
+@pytest.mark.parametrize("T,Hq,Hkv,Dh,bq,bk,causal,dtype", [
+    (128, 4, 4, 64, 64, 64, True, jnp.float32),
+    (256, 8, 2, 64, 128, 64, True, jnp.float32),
+    (256, 4, 1, 128, 64, 128, True, jnp.float32),   # MQA
+    (128, 2, 2, 64, 32, 64, False, jnp.float32),
+    (256, 4, 2, 64, 128, 128, True, jnp.bfloat16),
+])
+def test_flash_sweep(T, Hq, Hkv, Dh, bq, bk, causal, dtype):
+    keys = jax.random.split(jax.random.key(T + Hq), 3)
+    B = 2
+    q = jax.random.normal(keys[0], (B, T, Hq, Dh), dtype)
+    k = jax.random.normal(keys[1], (B, T, Hkv, Dh), dtype)
+    v = jax.random.normal(keys[2], (B, T, Hkv, Dh), dtype)
+    out = flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk,
+                          interpret=True)
+    ref = _ref_gqa(q, k, v, causal)
+    atol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=atol)
+
+
+def test_flash_cross_attention_shape():
+    """Tk != Tq (encoder-decoder cross attention path)."""
+    B, Tq, Tk, H, Dh = 1, 128, 256, 2, 64
+    q = jax.random.normal(jax.random.key(0), (B, Tq, H, Dh))
+    k = jax.random.normal(jax.random.key(1), (B, Tk, H, Dh))
+    v = jax.random.normal(jax.random.key(2), (B, Tk, H, Dh))
+    out = flash_attention(q, k, v, causal=False, block_q=64, block_k=64,
+                          interpret=True)
+    ref = _ref_gqa(q, k, v, False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+    assert out.shape == (B, Tq, H, Dh)

@@ -1,0 +1,117 @@
+"""Order scoring (Eq. 6): oracle vs chunked vs brute-force, and properties."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as hst
+
+from repro.core import (adjacency_from_best, build_score_table, random_cpts,
+                        random_dag, score_order_chunked, score_order_ref,
+                        topological_order)
+from repro.core.order_scoring import NEG_INF, consistent_mask
+from repro.data import ancestral_sample
+
+
+def make_table(n=7, q=2, s=3, m=300, seed=0):
+    rng = np.random.default_rng(seed)
+    adj = random_dag(rng, n, s, 0.4)
+    cpts = random_cpts(rng, adj, q)
+    data = ancestral_sample(rng, adj, cpts, m, q)
+    return build_score_table(data, q=q, s=s), adj
+
+
+def brute_force(table, pst, pos):
+    """O(n·S) python reference."""
+    table = np.asarray(table)
+    pst = np.asarray(pst)
+    n, S = table.shape
+    total, idxs = 0.0, []
+    for i in range(n):
+        best, besti = -np.inf, -1
+        for t in range(S):
+            cands = pst[t][pst[t] >= 0]
+            pars = cands + (cands >= i)
+            if all(pos[p] < pos[i] for p in pars):
+                if table[i, t] > best:
+                    best, besti = table[i, t], t
+        total += best
+        idxs.append(besti)
+    return total, np.asarray(idxs)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_ref_matches_brute_force(seed):
+    st, _ = make_table(seed=seed)
+    rng = np.random.default_rng(seed + 10)
+    pos = rng.permutation(st.n).astype(np.int32)
+    want, want_idx = brute_force(st.table, st.pst, pos)
+    got, got_idx, got_ls = score_order_ref(st.table, st.pst, jnp.asarray(pos))
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(got_idx), want_idx)
+    np.testing.assert_allclose(np.asarray(got_ls).sum(), want, rtol=1e-5)
+
+
+@pytest.mark.parametrize("block", [1, 4, 16, 64])
+@pytest.mark.parametrize("fn_name", ["chunked", "blocked"])
+def test_chunked_matches_ref(block, fn_name):
+    from repro.core.order_scoring import score_order_blocked
+    fn = {"chunked": score_order_chunked,
+          "blocked": score_order_blocked}[fn_name]
+    st, _ = make_table()
+    S = st.S
+    pad = (-S) % block
+    table = jnp.pad(st.table, ((0, 0), (0, pad)), constant_values=NEG_INF)
+    pst = jnp.pad(st.pst, ((0, pad), (0, 0)), constant_values=-1)
+    rng = np.random.default_rng(5)
+    for _ in range(3):
+        pos = jnp.asarray(rng.permutation(st.n).astype(np.int32))
+        a = score_order_ref(st.table, st.pst, pos)
+        b = fn(table, pst, pos, block=block)
+        np.testing.assert_allclose(a[0], b[0], rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+
+def test_first_node_gets_empty_parent_set():
+    st, _ = make_table()
+    pos = jnp.arange(st.n, dtype=jnp.int32)
+    _, idx, _ = score_order_ref(st.table, st.pst, pos)
+    assert int(idx[0]) == 0  # only the empty set precedes position 0
+
+
+def test_consistency_mask_basics():
+    st, _ = make_table()
+    pos = jnp.arange(st.n, dtype=jnp.int32)
+    m_first = consistent_mask(st.pst, jnp.int32(0), pos)
+    assert bool(m_first[0]) and int(m_first.sum()) == 1
+    m_last = consistent_mask(st.pst, jnp.int32(st.n - 1), pos)
+    assert int(m_last.sum()) == st.S  # everything precedes the last node
+
+
+@given(hst.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_score_invariant_under_nonbinding_relabel(seed):
+    """Scoring uses only relative positions: applying a strictly monotone map to
+    pos leaves score and argmax unchanged."""
+    st, _ = make_table()
+    rng = np.random.default_rng(seed)
+    pos = rng.permutation(st.n).astype(np.int32)
+    a = score_order_ref(st.table, st.pst, jnp.asarray(pos))
+    b = score_order_ref(st.table, st.pst, jnp.asarray(pos * 3 + 2))
+    np.testing.assert_allclose(a[0], b[0], rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+
+def test_best_graph_of_true_order_is_acyclic_and_close():
+    st, adj = make_table(n=8, m=2000, seed=7)
+    order = topological_order(adj)
+    pos = np.empty(8, np.int32)
+    pos[order] = np.arange(8)
+    _, idx, _ = score_order_ref(st.table, st.pst, jnp.asarray(pos))
+    learned = adjacency_from_best(np.asarray(idx), np.asarray(st.pst))
+    # learned graph must satisfy the order (hence be a DAG)
+    topological_order(learned)
+    for m_, i_ in zip(*np.nonzero(learned)):
+        assert pos[m_] < pos[i_]

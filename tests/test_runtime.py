@@ -1,0 +1,74 @@
+"""Runtime features: elastic re-meshing plans and straggler mitigation."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime.elastic import (accum_steps_for_batch, remesh_plan,
+                                   reshard_tree)
+from repro.runtime.straggler import StragglerPolicy, rebalance_chains
+
+
+def test_remesh_plan_shrink_grows_data_axis():
+    # healthy 512-chip 2-pod job
+    assert remesh_plan(512, model_parallel=16, prefer_pods=2) == \
+        ((2, 16, 16), ("pod", "data", "model"))
+    # a pod dies: restart on 256 chips, same model parallelism
+    assert remesh_plan(256, model_parallel=16) == ((16, 16), ("data", "model"))
+    # odd survivor counts still factor as long as TP divides
+    assert remesh_plan(192, model_parallel=16) == ((12, 16), ("data", "model"))
+    with pytest.raises(ValueError):
+        remesh_plan(250, model_parallel=16)
+
+
+def test_accum_steps_preserve_global_batch():
+    assert accum_steps_for_batch(256, 256) == 1
+    assert accum_steps_for_batch(256, 128) == 2   # half the chips -> 2 steps
+    with pytest.raises(ValueError):
+        accum_steps_for_batch(256, 96)
+
+
+def test_straggler_chain_cloning():
+    from repro.core.combinatorics import build_pst, n_parent_sets
+    from repro.core.mcmc import init_chain, mcmc_run
+    from repro.core.order_scoring import score_order_chunked
+
+    n, s = 8, 2
+    S = n_parent_sets(n - 1, s)
+    pst, _ = build_pst(n - 1, s)
+    rng = np.random.default_rng(0)
+    table = jnp.asarray(rng.normal(-40, 8, (n, S)).astype(np.float32))
+    pad = (-S) % 16
+    table = jnp.pad(table, ((0, 0), (0, pad)), constant_values=-3e38)
+    pst = jnp.pad(jnp.asarray(pst), ((0, pad), (0, 0)), constant_values=-1)
+    fn = functools.partial(score_order_chunked, table, pst, block=16)
+
+    keys = jax.random.split(jax.random.key(0), 4)
+    states = jax.vmap(lambda k: init_chain(k, n, fn))(keys)
+
+    # chain 2 misses twice -> cloned from the best chain with a fresh key
+    progressed = np.array([True, True, False, True])
+    missed = np.zeros(4, np.int64)
+    states1, missed = rebalance_chains(jax.random.key(1), states,
+                                       progressed, missed,
+                                       StragglerPolicy(patience=2))
+    assert missed[2] == 1           # first miss: no action yet
+    np.testing.assert_array_equal(np.asarray(states1.pos),
+                                  np.asarray(states.pos))
+
+    states2, missed = rebalance_chains(jax.random.key(2), states1,
+                                       progressed, missed,
+                                       StragglerPolicy(patience=2))
+    assert missed[2] == 0           # re-seeded
+    best = int(np.argmax(np.asarray(states.best_score)))
+    np.testing.assert_array_equal(np.asarray(states2.pos[2]),
+                                  np.asarray(states.pos[best]))
+    # fresh key: the clone diverges from its source immediately
+    assert not np.array_equal(
+        np.asarray(jax.random.key_data(states2.key[2])),
+        np.asarray(jax.random.key_data(states2.key[best])))
+    # cloned chain keeps sampling fine
+    st, _ = mcmc_run(states2.key[2], n, fn, 10)
+    assert np.isfinite(float(st.best_score))
