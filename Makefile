@@ -1,0 +1,14 @@
+# Tier-1 verification targets (mirrored by .github/workflows/ci.yml).
+PY ?= python
+export PYTHONPATH := src:$(PYTHONPATH)
+
+.PHONY: test bench-smoke bench-delta
+
+test:
+	$(PY) -m pytest -q
+
+bench-smoke:
+	$(PY) benchmarks/delta_vs_full.py --smoke
+
+bench-delta:
+	$(PY) benchmarks/delta_vs_full.py

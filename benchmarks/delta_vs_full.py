@@ -1,0 +1,110 @@
+"""Delta vs full per-iteration MCMC throughput (ISSUE 1 tentpole).
+
+The paper's per-iteration cost is the order rescore: O(n·S) for the full
+blocked path. A bounded-window move only perturbs `w` positions, so the
+incremental path (core/order_scoring.score_order_delta) does O(w·S) — an
+n/w asymptotic win that GROWS with graph size. This harness runs the real
+sampler (mcmc_run, identical proposals, window=8) with both scoring paths
+at n ∈ {16, 32, 64} and reports iterations/sec and the speedup.
+
+  PYTHONPATH=src python benchmarks/delta_vs_full.py [--smoke] [--iters N]
+
+Scoring cost depends only on (n, S): tables are synthetic random, exactly
+the setting of benchmarks/table3_scoring.py.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from .common import emit, timeit
+except ImportError:                      # run as a plain script
+    import os
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from common import emit, timeit
+
+from repro.core.combinatorics import build_pst, n_parent_sets
+from repro.core.mcmc import mcmc_run
+from repro.core.order_scoring import (NEG_INF, delta_window,
+                                      score_order_blocked, score_order_delta)
+
+WINDOW = 8
+
+
+def make_problem(n: int, s: int, block: int, seed: int = 0):
+    S = n_parent_sets(n - 1, s)
+    pst, _ = build_pst(n - 1, s)
+    rng = np.random.default_rng(seed)
+    table = jnp.asarray(rng.normal(-40, 8, (n, S)).astype(np.float32))
+    pad = (-S) % block
+    table = jnp.pad(table, ((0, 0), (0, pad)), constant_values=NEG_INF)
+    pst = jnp.pad(jnp.asarray(pst), ((0, pad), (0, 0)), constant_values=-1)
+    return table, pst, S
+
+
+def bench_size(n: int, s: int, iters: int, block: int = 4096) -> dict:
+    table, pst, S = make_problem(n, s, block)
+    block = min(block, table.shape[1])
+    w = delta_window(n, WINDOW)
+    assert w, f"n={n} too small for window {WINDOW}"
+    score_fn = functools.partial(score_order_blocked, table, pst, block=block)
+
+    def delta_fn(pos, lo, prev_ls, prev_idx):
+        return score_order_delta(table, pst, pos, prev_ls, prev_idx, lo,
+                                 window=w, block=block)
+
+    def run_full():
+        st, _ = mcmc_run(jax.random.key(0), n, score_fn, iters, window=w)
+        return st.score
+
+    def run_delta():
+        st, _ = mcmc_run(jax.random.key(0), n, score_fn, iters,
+                         delta_fn=delta_fn, window=w)
+        return st.score
+
+    # same key + same proposals: the two paths must agree before we time them
+    a, _ = mcmc_run(jax.random.key(1), n, score_fn, min(iters, 50), window=w)
+    b, _ = mcmc_run(jax.random.key(1), n, score_fn, min(iters, 50),
+                    delta_fn=delta_fn, window=w)
+    assert float(a.score) == float(b.score), "delta != full — do not time a bug"
+
+    t_full = timeit(run_full)
+    t_delta = timeit(run_delta)
+    return {
+        "n": n, "S": S, "window": w, "iters": iters,
+        "full_its_per_s": iters / t_full,
+        "delta_its_per_s": iters / t_delta,
+        "speedup": t_full / t_delta,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes/iters — CI wiring check, seconds")
+    ap.add_argument("--iters", type=int, default=0,
+                    help="override iterations per timed run")
+    ap.add_argument("--s", type=int, default=3, help="max parent-set size")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        sizes, iters = [16], args.iters or 30
+    else:
+        sizes, iters = [16, 32, 64], args.iters or 300
+    rows = [bench_size(n, args.s, iters) for n in sizes]
+    emit("delta_vs_full", rows)
+    if not args.smoke:
+        last = rows[-1]
+        print(f"\nn={last['n']}: delta path is {last['speedup']:.1f}x the "
+              f"full-rescore path (target >= 3x)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,9 @@ def main():
     ap.add_argument("--iters", type=int, default=2000)
     ap.add_argument("--chains", type=int, default=4)
     ap.add_argument("--samples", type=int, default=2000)
+    ap.add_argument("--window", type=int, default=8,
+                    help="bounded-move window; delta rescoring recomputes "
+                         "only these nodes per iteration (0 = full rescore)")
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
@@ -29,11 +32,13 @@ def main():
 
     ckpt_dir = tempfile.mkdtemp(prefix="alarm_ckpt_")
     cfg = LearnConfig(q=2, s=4, iters=args.iters, chains=args.chains,
+                      window=args.window,
                       checkpoint_every=max(args.iters // 4, 1),
                       checkpoint_dir=ckpt_dir)
 
     print(f"ALARM: 37 nodes, {args.samples} samples, {args.chains} chains × "
-          f"{args.iters} iters (checkpoint every {cfg.checkpoint_every})")
+          f"{args.iters} iters (checkpoint every {cfg.checkpoint_every}, "
+          f"move window {args.window})")
     out = learn_structure(data, cfg)
     fp, tp = roc_point(out["adjacency"], truth)
     print(f"preprocess {out['preprocess_s']:.1f}s   "

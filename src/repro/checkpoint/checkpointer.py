@@ -26,7 +26,9 @@ _MANIFEST = "manifest.json"
 
 
 def _flatten_with_paths(tree):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    # jax.tree.flatten_with_path is newer than some supported jax versions;
+    # the tree_util spelling exists on all of them
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     names = ["leaf_" + "_".join(_path_str(k) for k in path)
              for path, _ in flat]
     return names, [v for _, v in flat], treedef

@@ -1,10 +1,30 @@
 """Order-space Metropolis–Hastings MCMC (paper §III, Algorithm 1).
 
-Random walk over topological orders: propose by swapping two random nodes,
-accept with probability min(1, P(≺_new)/P(≺)) — in log space,
-``log u < score(≺_new) − score(≺)``. The best graph (per-node argmax parent
-sets) is produced by the scorer itself on every iteration, so the global best
-graph is tracked for free — no postprocessing (paper §III-B).
+Random walk over topological orders, accepted with probability
+min(1, P(≺_new)/P(≺)) — in log space, ``log u < score(≺_new) − score(≺)``.
+The best graph (per-node argmax parent sets) is produced by the scorer itself
+on every iteration, so the global best graph is tracked for free — no
+postprocessing (paper §III-B).
+
+Two proposal regimes:
+
+* ``window=0`` (legacy): the paper's unbounded random transposition
+  (:func:`_propose_swap`), full rescore every iteration.
+* ``window=w ≥ 2``: a mixture of three SYMMETRIC bounded-window moves
+  (:func:`propose_move`), drawn categorically per iteration —
+
+    - bounded swap: positions (p, p+d), d ~ U[1, w-1];
+    - single-node insertion: node at position a re-inserted at b, |a-b| < w
+      (out-of-range targets degrade to a no-op, preserving symmetry);
+    - window reversal: positions [p, p+len-1] reversed, len ~ U[2, w]
+      (an involution, trivially symmetric).
+
+  Every move permutes positions only inside a window of ≤ w positions
+  starting at the returned ``lo``, which is what makes the incremental
+  O(w·S) rescore (core/order_scoring.score_order_delta) exact. Richer move
+  sets also mix better than pure transpositions (Kuipers et al. 1803.07859;
+  Agrawal et al. 1803.05554). All moves are symmetric, so the acceptance
+  test stays the pure score ratio.
 
 Everything is a `lax.scan` over iterations; chains are vmapped (and sharded
 over the `data`/`pod` mesh axes by launch/bn_learn.py).
@@ -17,10 +37,16 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["ChainState", "init_chain", "mcmc_run", "mcmc_run_chains", "exchange_best"]
+from .order_scoring import inverse_permutation
+
+__all__ = ["ChainState", "init_chain", "mcmc_run", "mcmc_run_chains",
+           "mcmc_step", "propose_move", "exchange_best"]
 
 ScoreFn = Callable[[jnp.ndarray], tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]]
 # pos (n,) -> (score, best_idx (n,), best_ls (n,))
+DeltaFn = Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray],
+                   tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]]
+# (new_pos (n,), lo, prev_ls (n,), prev_idx (n,)) -> same triple
 
 
 class ChainState(NamedTuple):
@@ -32,13 +58,16 @@ class ChainState(NamedTuple):
     best_idx: jax.Array     # (n,) int32 — its parent sets
     best_pos: jax.Array     # (n,) int32 — its order
     accepts: jax.Array      # int32
+    # appended LAST so positionally-named checkpoint leaves of the previous
+    # 8-field layout stay aligned on restore
+    cur_ls: jax.Array       # (n,) f32 — per-node best local scores (delta cache)
 
 
 def init_chain(key: jax.Array, n: int, score_fn: ScoreFn) -> ChainState:
     key, sub = jax.random.split(key)
     pos = jax.random.permutation(sub, n).astype(jnp.int32)
-    score, idx, _ = score_fn(pos)
-    return ChainState(key, pos, score, idx, score, idx, pos, jnp.int32(0))
+    score, idx, ls = score_fn(pos)
+    return ChainState(key, pos, score, idx, score, idx, pos, jnp.int32(0), ls)
 
 
 def _propose_swap(key: jax.Array, pos: jax.Array) -> jax.Array:
@@ -52,20 +81,79 @@ def _propose_swap(key: jax.Array, pos: jax.Array) -> jax.Array:
     return pos.at[a].set(pb).at[b].set(pa)
 
 
-def mcmc_step(state: ChainState, score_fn: ScoreFn) -> ChainState:
+def propose_move(key: jax.Array, pos: jax.Array, *, window: int):
+    """Bounded-window move mixture. Returns (new_pos, lo) where every changed
+    position lies in [lo, lo+window-1]. Requires window ≥ 2 (and n ≥ 2).
+
+    Symmetry: each move's reverse is generated with the same probability
+    (swap/reversal pick unordered windows; insertion draws (a, ±d) and the
+    inverse is (b, ∓d), equiprobable), so Metropolis acceptance needs no
+    Hastings correction.
+    """
+    n = pos.shape[0]
+    w = min(window, n)
+    k_mv, k1, k2, k3 = jax.random.split(key, 4)
+    order = inverse_permutation(pos)
+
+    def swap(_):
+        d = jax.random.randint(k1, (), 1, w)
+        p = jax.random.randint(k2, (), 0, n - d)
+        a, b = order[p], order[p + d]
+        return pos.at[a].set(p + d).at[b].set(p), p
+
+    def insert(_):
+        a = jax.random.randint(k1, (), 0, n)
+        d = jax.random.randint(k2, (), 1, w)
+        sgn = jnp.where(jax.random.bernoulli(k3), 1, -1)
+        b = a + sgn * d
+        b = jnp.where((b >= 0) & (b < n), b, a)           # off-edge -> no-op
+        x = order[a]
+        down = ((pos > a) & (pos <= b)).astype(pos.dtype)  # a < b: shift left
+        up = ((pos >= b) & (pos < a)).astype(pos.dtype)    # a > b: shift right
+        new = (pos - down + up).at[x].set(b)
+        return new.astype(pos.dtype), jnp.minimum(a, b)
+
+    def reverse(_):
+        ln = jax.random.randint(k1, (), 2, w + 1)
+        p = jax.random.randint(k2, (), 0, n - ln + 1)
+        hi = p + ln - 1
+        inwin = (pos >= p) & (pos <= hi)
+        return jnp.where(inwin, p + hi - pos, pos).astype(pos.dtype), p
+
+    mv = jax.random.randint(k_mv, (), 0, 3)
+    new_pos, lo = jax.lax.switch(mv, [swap, insert, reverse], None)
+    return new_pos, lo.astype(jnp.int32)
+
+
+def mcmc_step(state: ChainState, score_fn: ScoreFn,
+              delta_fn: DeltaFn | None = None,
+              window: int = 0) -> ChainState:
+    """One MH iteration. window ≥ 2 selects the bounded-window move mixture;
+    delta_fn (requires window ≥ 2) selects the incremental O(window·S)
+    rescore seeded from the chain's (cur_ls, cur_idx) cache."""
+    assert delta_fn is None or window >= 2, \
+        "the delta path needs bounded-window proposals (window >= 2)"
     key, k_prop, k_u = jax.random.split(state.key, 3)
-    new_pos = _propose_swap(k_prop, state.pos)
-    new_score, new_idx, _ = score_fn(new_pos)
+    if window >= 2:
+        new_pos, lo = propose_move(k_prop, state.pos, window=window)
+    else:
+        new_pos, lo = _propose_swap(k_prop, state.pos), jnp.int32(0)
+    if delta_fn is not None:
+        new_score, new_idx, new_ls = delta_fn(new_pos, lo, state.cur_ls,
+                                              state.cur_idx)
+    else:
+        new_score, new_idx, new_ls = score_fn(new_pos)
     log_u = jnp.log(jax.random.uniform(k_u, (), minval=1e-38))
     accept = log_u < (new_score - state.score)
 
     pos = jnp.where(accept, new_pos, state.pos)
     score = jnp.where(accept, new_score, state.score)
     cur_idx = jnp.where(accept, new_idx, state.cur_idx)
+    cur_ls = jnp.where(accept, new_ls, state.cur_ls)
 
     better = accept & (new_score > state.best_score)
     return ChainState(
-        key=key, pos=pos, score=score, cur_idx=cur_idx,
+        key=key, pos=pos, score=score, cur_idx=cur_idx, cur_ls=cur_ls,
         best_score=jnp.where(better, new_score, state.best_score),
         best_idx=jnp.where(better, new_idx, state.best_idx),
         best_pos=jnp.where(better, new_pos, state.best_pos),
@@ -73,14 +161,16 @@ def mcmc_step(state: ChainState, score_fn: ScoreFn) -> ChainState:
     )
 
 
-@functools.partial(jax.jit, static_argnames=("n", "score_fn", "iters", "trace"))
+@functools.partial(jax.jit, static_argnames=("n", "score_fn", "iters", "trace",
+                                             "delta_fn", "window"))
 def mcmc_run(key: jax.Array, n: int, score_fn: ScoreFn, iters: int,
-             trace: bool = False):
+             trace: bool = False, delta_fn: DeltaFn | None = None,
+             window: int = 0):
     """Run one chain for `iters` iterations. Returns (final_state, score_trace)."""
     state = init_chain(key, n, score_fn)
 
     def body(st, _):
-        st = mcmc_step(st, score_fn)
+        st = mcmc_step(st, score_fn, delta_fn, window)
         return st, (st.score if trace else None)
 
     state, tr = jax.lax.scan(body, state, None, length=iters)
@@ -88,10 +178,12 @@ def mcmc_run(key: jax.Array, n: int, score_fn: ScoreFn, iters: int,
 
 
 def mcmc_run_chains(key: jax.Array, n_chains: int, n: int, score_fn: ScoreFn,
-                    iters: int):
+                    iters: int, delta_fn: DeltaFn | None = None,
+                    window: int = 0):
     """vmapped independent chains (DP axis). Returns stacked final states."""
     keys = jax.random.split(key, n_chains)
-    run = functools.partial(mcmc_run, n=n, score_fn=score_fn, iters=iters)
+    run = functools.partial(mcmc_run, n=n, score_fn=score_fn, iters=iters,
+                            delta_fn=delta_fn, window=window)
     states, _ = jax.vmap(lambda k: run(k))(keys)
     return states
 

@@ -14,6 +14,32 @@ position of node v in ≺), return (total_score, best_idx (n,), best_ls (n,))
 where best_idx[i] is the PST index of the argmax parent set — i.e. the best
 graph consistent with the order, produced *during* scoring (no postprocessing,
 paper §III-B).
+
+Incremental (delta) scoring
+---------------------------
+
+:func:`score_order_delta` is the per-iteration fast path of the MCMC sampler.
+A bounded-window move (core/mcmc.py: adjacent/bounded swap, single-node
+insertion, window reversal) permutes only the positions in ``[lo, lo+w-1]``.
+A node whose position is OUTSIDE that window keeps its exact predecessor set
+(the whole window lies on one side of it), so its consistency masks — and
+therefore its cached (best_ls, best_idx) — are unchanged. Only the ≤ w nodes
+occupying the window need rescoring: O(w·S) work instead of O(n·S).
+
+Delta contract: given the proposal's NEW ``pos``, the PREVIOUS order's
+``(prev_ls, prev_idx)`` and the window start ``lo`` (clipped internally to
+``[0, n-window]`` — clipping only widens the recompute set, which is safe
+because rescoring an unaffected node reproduces its cached value bitwise),
+return the same ``(total, best_idx, best_ls)`` triple, *exactly* equal to a
+full rescore: the window nodes go through the same `_score_nodes_blocked`
+inner loop (same blocks, same first-wins tie-break) and the total is
+``best_ls.sum()`` (same reduction order as the full path).
+
+Crossover heuristic: the delta path wins only while ``window`` is small
+relative to n; :func:`delta_window` returns 0 (meaning "use the full blocked
+path") when ``window < 2`` or ``window > DELTA_CROSSOVER · n``. The decision
+is static (window and n are trace-time constants), so no lax.cond is paid —
+and under vmap over chains no dead full-rescore branch is materialized.
 """
 from __future__ import annotations
 
@@ -25,7 +51,46 @@ import jax.numpy as jnp
 NEG_INF = jnp.float32(-3.0e38)
 
 __all__ = ["consistent_mask", "score_order_ref", "score_order_chunked",
-           "score_order_blocked", "score_order_sum", "NEG_INF"]
+           "score_order_blocked", "score_order_sum", "score_order_delta",
+           "delta_window", "inverse_permutation", "window_nodes",
+           "splice_window", "DELTA_CROSSOVER", "NEG_INF"]
+
+DELTA_CROSSOVER = 0.5   # delta pays off while window ≤ this fraction of n
+
+
+def delta_window(n: int, window: int, crossover: float = DELTA_CROSSOVER) -> int:
+    """Static crossover decision: the window to use for the delta path, or 0
+    to mean "rescore everything with the blocked full path"."""
+    if window < 2 or window > max(2, int(n * crossover)):
+        return 0
+    return min(window, n)
+
+
+def inverse_permutation(pos: jnp.ndarray) -> jnp.ndarray:
+    """order (n,) with order[p] = node at position p (inverse of pos)."""
+    n = pos.shape[0]
+    return jnp.zeros((n,), jnp.int32).at[pos].set(
+        jnp.arange(n, dtype=jnp.int32))
+
+
+def window_nodes(pos: jnp.ndarray, lo: jnp.ndarray, window: int) -> jnp.ndarray:
+    """(window,) ids of the nodes occupying positions [lo, lo+window-1],
+    with lo clipped into [0, n-window] (clipping only widens the recompute
+    set — safe, see the delta contract above)."""
+    n = pos.shape[0]
+    lo = jnp.clip(lo.astype(jnp.int32), 0, n - window)
+    return jax.lax.dynamic_slice_in_dim(inverse_permutation(pos), lo, window)
+
+
+def splice_window(prev_ls: jnp.ndarray, prev_idx: jnp.ndarray,
+                  win: jnp.ndarray, ls_w: jnp.ndarray, idx_w: jnp.ndarray):
+    """Scatter freshly-rescored window results into the cached per-node
+    arrays and return the (total, best_idx, best_ls) contract triple. The
+    ONE splice used by every delta path (blocked, kernel, sharded), so the
+    bitwise delta≡full guarantee lives in a single place."""
+    best_ls = prev_ls.at[win].set(ls_w)
+    best_idx = prev_idx.at[win].set(idx_w)
+    return best_ls.sum(), best_idx, best_ls
 
 
 def consistent_mask(pst: jnp.ndarray, node: jnp.ndarray,
@@ -80,27 +145,30 @@ def score_order_sum(table: jnp.ndarray, pst: jnp.ndarray, pos: jnp.ndarray):
     return tot.sum(), best_idx.astype(jnp.int32), best_ls
 
 
-@functools.partial(jax.jit, static_argnames=("block",))
-def score_order_blocked(table: jnp.ndarray, pst: jnp.ndarray,
-                        pos: jnp.ndarray, *, block: int = 4096):
-    """Same contract as score_order_chunked, restructured block-OUTER /
-    node-INNER (§Perf hillclimb #3): the PST block is loaded once and the
-    consistency masks for ALL n nodes are computed against it while it is
-    hot, so HBM traffic drops from n·(S·4 + S·s·4) to n·S·4 + S·s·4 —
-    ~(s+1)/(1+s/n)× less. This is exactly the Pallas kernel's revisiting-grid
-    order (grid (S/blk, n), PST block index depends on dim 0 only)."""
-    n, S = table.shape
-    assert S % block == 0, "pad S to a multiple of block"
+def _score_nodes_blocked(rows: jnp.ndarray, node_ids: jnp.ndarray,
+                         pst: jnp.ndarray, pos: jnp.ndarray, *, block: int):
+    """Block-outer/node-inner masked max+argmax for an ARBITRARY node subset.
+
+    rows: (k, S) score-table rows for node_ids; node_ids: (k,) actual node
+    ids (the candidate→node shift depends on them); pos: (n,) the full
+    position vector. Returns (best_ls (k,), best_idx (k,)).
+
+    This is the single inner loop shared by the full blocked path
+    (node_ids = arange(n)) and the delta path (node_ids = the moved window),
+    so both produce bitwise-identical values and identical first-block /
+    first-index tie-breaking.
+    """
+    k, S = rows.shape
+    n = pos.shape[0]
     nb = S // block
-    nodes = jnp.arange(n)
     # Candidate c maps to node c + (c >= i), so a parent's position is either
     # pos[c] or pos[c+1]: gather BOTH once per block (node-independent) and
     # pick per node with an elementwise select — no per-(node, block) gather.
     pos_ext = jnp.concatenate([pos, jnp.zeros((1,), pos.dtype)])
 
     def body(carry, b):
-        bmax, barg = carry                                # (n,), (n,)
-        tbl = jax.lax.dynamic_slice_in_dim(table, b * block, block, axis=1)
+        bmax, barg = carry                                # (k,), (k,)
+        tbl = jax.lax.dynamic_slice_in_dim(rows, b * block, block, axis=1)
         psl = jax.lax.dynamic_slice_in_dim(pst, b * block, block, axis=0)
         safe = jnp.clip(psl, 0)
         ppos_lo = pos_ext[safe]                           # (blk, s) c -> c
@@ -113,15 +181,52 @@ def score_order_blocked(table: jnp.ndarray, pst: jnp.ndarray,
             a = jnp.argmax(masked)
             return masked[a], a
 
-        v, a = jax.vmap(per_node)(nodes, tbl)             # (n,), (n,)
+        v, a = jax.vmap(per_node)(node_ids, tbl)          # (k,), (k,)
         better = v > bmax
         return (jnp.where(better, v, bmax),
                 jnp.where(better, a + b * block, barg)), None
 
     (best_ls, best_idx), _ = jax.lax.scan(
-        body, (jnp.full((n,), NEG_INF), jnp.zeros((n,), jnp.int32)),
+        body, (jnp.full((k,), NEG_INF), jnp.zeros((k,), jnp.int32)),
         jnp.arange(nb))
-    return best_ls.sum(), best_idx.astype(jnp.int32), best_ls
+    return best_ls, best_idx.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def score_order_blocked(table: jnp.ndarray, pst: jnp.ndarray,
+                        pos: jnp.ndarray, *, block: int = 4096):
+    """Same contract as score_order_chunked, restructured block-OUTER /
+    node-INNER (§Perf hillclimb #3): the PST block is loaded once and the
+    consistency masks for ALL n nodes are computed against it while it is
+    hot, so HBM traffic drops from n·(S·4 + S·s·4) to n·S·4 + S·s·4 —
+    ~(s+1)/(1+s/n)× less. This is exactly the Pallas kernel's revisiting-grid
+    order (grid (S/blk, n), PST block index depends on dim 0 only)."""
+    n, S = table.shape
+    assert S % block == 0, "pad S to a multiple of block"
+    best_ls, best_idx = _score_nodes_blocked(table, jnp.arange(n), pst, pos,
+                                             block=block)
+    return best_ls.sum(), best_idx, best_ls
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block"))
+def score_order_delta(table: jnp.ndarray, pst: jnp.ndarray, pos: jnp.ndarray,
+                      prev_ls: jnp.ndarray, prev_idx: jnp.ndarray,
+                      lo: jnp.ndarray, *, window: int, block: int = 4096):
+    """Incremental rescore after a bounded-window move (module docstring).
+
+    pos is the PROPOSED order; (prev_ls, prev_idx) are the per-node caches of
+    the order it was proposed from; lo is the first position the move could
+    have touched. Recomputes only the `window` nodes occupying positions
+    [lo, lo+window-1] under the new order — O(window·S) vs O(n·S) — and
+    returns (total, best_idx (n,), best_ls (n,)) exactly equal to
+    score_order_blocked(table, pst, pos, block=block)."""
+    n, S = table.shape
+    assert S % block == 0, "pad S to a multiple of block"
+    w = min(window, n)
+    win = window_nodes(pos, lo, w)                        # (w,) node ids
+    rows = table[win]                                     # (w, S)
+    ls_w, idx_w = _score_nodes_blocked(rows, win, pst, pos, block=block)
+    return splice_window(prev_ls, prev_idx, win, ls_w, idx_w)
 
 
 @functools.partial(jax.jit, static_argnames=("block",))

@@ -25,11 +25,12 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from .order_scoring import (NEG_INF, consistent_mask, score_order_blocked,
-                            score_order_chunked)
+from .order_scoring import (NEG_INF, _score_nodes_blocked, consistent_mask,
+                            delta_window, score_order_blocked,
+                            score_order_chunked, splice_window, window_nodes)
 
-__all__ = ["score_order_sharded", "make_sharded_score_fn", "pad_table",
-           "sharded_chain_step"]
+__all__ = ["score_order_sharded", "make_sharded_score_fn",
+           "make_sharded_delta_fn", "pad_table", "sharded_chain_step"]
 
 INT_MAX = jnp.int32(2**31 - 1)
 
@@ -86,15 +87,33 @@ def score_order_sharded(table, pst, pos, mesh, *, axis: str = "model",
     return go(table, pst, pos)
 
 
+def _local_delta(table_l, pst_l, pos, lo, offset, *, window: int, block: int,
+                 axis: str):
+    """Device-local window rescore + the same pmax/pmin reduction, but on
+    (window,)-vectors instead of (n,) — the delta path's collective payload
+    shrinks with the window too. Returns (win_nodes, ls_g, idx_g)."""
+    win = window_nodes(pos, lo, window)
+    ls_l, idx_l = _score_nodes_blocked(table_l[win], win, pst_l, pos,
+                                       block=min(block, table_l.shape[1]))
+    idx_l = idx_l + offset
+    ls_g = jax.lax.pmax(ls_l, axis)                       # Fig. 7, level 2
+    cand = jnp.where(ls_l >= ls_g, idx_l, INT_MAX)
+    idx_g = jax.lax.pmin(cand, axis)                      # id resolution
+    return win, ls_g, idx_g
+
+
 def sharded_chain_step(states, table, pst, mesh, *, axis: str = "model",
-                       block: int = 4096):
+                       block: int = 4096, window: int = 0):
     """One MCMC iteration for ALL chains on the production mesh, as a single
     shard_map program: chains are DP over the pod/data axes, the score table
     is TP over `axis`. Per iteration the cross-device traffic is the (n,)
-    pmax/pmin pair per chain — everything else is local.
+    pmax/pmin pair per chain — or (window,) on the delta path.
 
     states: ChainState with a leading chains dim C divisible by the data-axes
     extent. table must be padded (pad_table) to axis_size × block.
+    window ≥ 2 (and ≤ DELTA_CROSSOVER·n, else it degrades to the full path)
+    enables bounded-window proposals + incremental O(window·S/tp) rescoring
+    per device.
     """
     from jax.experimental.shard_map import shard_map
 
@@ -103,6 +122,7 @@ def sharded_chain_step(states, table, pst, mesh, *, axis: str = "model",
     n, S = table.shape
     tp = mesh.shape[axis]
     shard = S // tp
+    w = delta_window(n, window)
     dax = tuple(a for a in mesh.axis_names if a != axis)
     st_specs = jax.tree.map(lambda _: P(dax), states)
     in_specs = (st_specs, P(None, axis), P(axis, None))
@@ -120,7 +140,15 @@ def sharded_chain_step(states, table, pst, mesh, *, axis: str = "model",
             idx_g = jax.lax.pmin(cand, axis)
             return ls_g.sum(), idx_g, ls_g
 
-        return jax.vmap(lambda s: mcmc_step(s, score_fn))(states_l)
+        delta_fn = None
+        if w:
+            def delta_fn(pos, lo, prev_ls, prev_idx):
+                win, ls_g, idx_g = _local_delta(
+                    table_l, pst_l, pos, lo, my * shard, window=w,
+                    block=block, axis=axis)
+                return splice_window(prev_ls, prev_idx, win, ls_g, idx_g)
+
+        return jax.vmap(lambda s: mcmc_step(s, score_fn, delta_fn, w))(states_l)
 
     return go(states, table, pst)
 
@@ -136,4 +164,35 @@ def make_sharded_score_fn(table, pst, mesh, *, axis: str = "model",
     def fn(pos):
         return score_order_sharded(table, pst, pos, mesh, axis=axis,
                                    block=block)
+    return fn
+
+
+def make_sharded_delta_fn(table, pst, mesh, *, window: int,
+                          axis: str = "model", block: int = 4096):
+    """Delta-path companion of make_sharded_score_fn (same padding rules, so
+    the two are bitwise-consistent). Returns a DeltaFn with the core.mcmc
+    contract, or None when the crossover heuristic rejects the window."""
+    from jax.experimental.shard_map import shard_map
+
+    n = table.shape[0]
+    w = delta_window(n, window)
+    if not w:
+        return None
+    tp = mesh.shape[axis]
+    block = min(block, max((table.shape[1] + tp - 1) // tp, 8))
+    table, pst = pad_table(table, pst, tp * block)
+    shard = table.shape[1] // tp
+    in_specs = (P(None, axis), P(axis, None), P(None), P(), P(None), P(None))
+    out_specs = (P(), P(None), P(None))
+
+    @functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_rep=False)
+    def go(table_l, pst_l, pos, lo, prev_ls, prev_idx):
+        my = jax.lax.axis_index(axis)
+        win, ls_g, idx_g = _local_delta(table_l, pst_l, pos, lo, my * shard,
+                                        window=w, block=block, axis=axis)
+        return splice_window(prev_ls, prev_idx, win, ls_g, idx_g)
+
+    def fn(pos, lo, prev_ls, prev_idx):
+        return go(table, pst, pos, lo, prev_ls, prev_idx)
     return fn

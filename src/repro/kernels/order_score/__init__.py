@@ -1,4 +1,5 @@
-from .ops import order_score, pad_for_kernel
+from .ops import order_score, order_score_delta, pad_for_kernel
 from .ref import order_score_ref
 
-__all__ = ["order_score", "pad_for_kernel", "order_score_ref"]
+__all__ = ["order_score", "order_score_delta", "pad_for_kernel",
+           "order_score_ref"]

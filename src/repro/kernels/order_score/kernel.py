@@ -31,10 +31,17 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -3.0e38
 
 
-def _order_score_kernel(pos_ref, table_ref, pst_ref, val_ref, idx_ref,
-                        lo_ref, hi_ref, *, block_s: int, n: int, s: int):
+def _order_score_window_kernel(pos_ref, nid_ref, table_ref, pst_ref, val_ref,
+                               idx_ref, lo_ref, hi_ref, *, block_s: int,
+                               n: int, w: int, s: int):
+    """The one scoring kernel body: grid dim 1 runs over w ROW SLOTS whose
+    actual node ids come from nid_ref (the candidate→node shift and the
+    node's own position are resolved per slot). The full path is the special
+    case nid_ref = arange(n) with w = n; the delta path passes the w moved
+    window nodes — identical tile order, accumulator fold, and tie-break by
+    construction."""
     b = pl.program_id(0)          # parent-set block (outer)
-    i = pl.program_id(1)          # node (inner — PST tile stays hot)
+    i = pl.program_id(1)          # window slot (inner — PST tile stays hot)
 
     @pl.when(jnp.logical_and(b == 0, i == 0))
     def _init():
@@ -46,33 +53,76 @@ def _order_score_kernel(pos_ref, table_ref, pst_ref, val_ref, idx_ref,
 
     @pl.when(i == 0)
     def _prep():
-        # positions under both candidate->node maps, once per block
         safe = jnp.maximum(pst, 0)
         iota = jax.lax.broadcasted_iota(jnp.int32, (block_s, s, n), 2)
         oh_lo = safe[..., None] == iota
         lo_ref[...] = jnp.sum(jnp.where(oh_lo, pos[None, None, :], 0),
                               axis=-1).astype(jnp.int32)
-        hi = jnp.minimum(safe + 1, n - 1)          # c+1==n has pos anyway
+        hi = jnp.minimum(safe + 1, n - 1)
         oh_hi = hi[..., None] == iota
         hi_ref[...] = jnp.sum(jnp.where(oh_hi, pos[None, None, :], 0),
                               axis=-1).astype(jnp.int32)
 
     scores = table_ref[0, :]                      # (BLK,)
-    my_pos = jnp.sum(jnp.where(jnp.arange(n) == i, pos, 0))
+    nid = jnp.sum(jnp.where(jnp.arange(w) == i, nid_ref[...], 0))
+    my_pos = jnp.sum(jnp.where(jnp.arange(n) == nid, pos, 0))
 
-    ppos = jnp.where(pst >= i, hi_ref[...], lo_ref[...])
-    ok = jnp.where(pst < 0, True, ppos < my_pos)  # padding always consistent
-    consistent = jnp.all(ok, axis=-1)             # (BLK,)
+    ppos = jnp.where(pst >= nid, hi_ref[...], lo_ref[...])
+    ok = jnp.where(pst < 0, True, ppos < my_pos)
+    consistent = jnp.all(ok, axis=-1)
 
     masked = jnp.where(consistent, scores, NEG_INF)
     larg = jnp.argmax(masked).astype(jnp.int32)
     lmax = jnp.max(masked)
 
-    cur = pl.load(val_ref, (i, 0))
+    # accumulator column index as a jnp scalar, not a python int: interpret-
+    # mode state discharge on jax 0.4.x rejects raw-int indices
+    _Z = jnp.int32(0)
+    cur = pl.load(val_ref, (i, _Z))
     better = lmax > cur
-    pl.store(val_ref, (i, 0), jnp.where(better, lmax, cur))
-    pl.store(idx_ref, (i, 0),
-             jnp.where(better, larg + b * block_s, pl.load(idx_ref, (i, 0))))
+    pl.store(val_ref, (i, _Z), jnp.where(better, lmax, cur))
+    pl.store(idx_ref, (i, _Z),
+             jnp.where(better, larg + b * block_s, pl.load(idx_ref, (i, _Z))))
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def order_score_window_pallas(rows: jnp.ndarray, node_ids: jnp.ndarray,
+                              pst: jnp.ndarray, pos: jnp.ndarray, *,
+                              block_s: int = 2048, interpret: bool = False):
+    """(w, S) gathered rows, (w,) node ids, (S, s) pst, (n,) pos ->
+    (best_val (w,), best_idx (w,)). S must be a multiple of block_s."""
+    w, S = rows.shape
+    n = pos.shape[0]
+    s = pst.shape[1]
+    assert S % block_s == 0, "pad S to a multiple of block_s"
+    grid = (S // block_s, w)
+
+    kernel = functools.partial(_order_score_window_kernel, block_s=block_s,
+                               n=n, w=w, s=s)
+    val, idx = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n,), lambda b, i: (0,)),              # pos
+            pl.BlockSpec((w,), lambda b, i: (0,)),              # node ids
+            pl.BlockSpec((1, block_s), lambda b, i: (i, b)),    # row tile
+            pl.BlockSpec((block_s, s), lambda b, i: (b, 0)),    # PST tile (hot)
+        ],
+        out_specs=[
+            pl.BlockSpec((w, 1), lambda b, i: (0, 0)),          # running max
+            pl.BlockSpec((w, 1), lambda b, i: (0, 0)),          # running argmax
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((w, 1), jnp.float32),
+            jax.ShapeDtypeStruct((w, 1), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_s, s), jnp.int32),                # ppos_lo
+            pltpu.VMEM((block_s, s), jnp.int32),                # ppos_hi
+        ],
+        interpret=interpret,
+    )(pos, node_ids, rows, pst)
+    return val[:, 0], idx[:, 0]
 
 
 @functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
@@ -81,33 +131,10 @@ def order_score_pallas(table: jnp.ndarray, pst: jnp.ndarray, pos: jnp.ndarray,
     """(n, S) table, (S, s) pst, (n,) pos -> (best_val (n,), best_idx (n,)).
 
     S must be a multiple of block_s (pad table with NEG_INF, pst with -1).
+    The full score IS the windowed kernel with node_ids = arange(n) — one
+    kernel body, so full and delta can never diverge on masking/tie-break.
     """
-    n, S = table.shape
-    s = pst.shape[1]
-    assert S % block_s == 0, "pad S to a multiple of block_s"
-    grid = (S // block_s, n)
-
-    kernel = functools.partial(_order_score_kernel, block_s=block_s, n=n, s=s)
-    val, idx = pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((n,), lambda b, i: (0,)),              # pos
-            pl.BlockSpec((1, block_s), lambda b, i: (i, b)),    # table tile
-            pl.BlockSpec((block_s, s), lambda b, i: (b, 0)),    # PST tile (hot)
-        ],
-        out_specs=[
-            pl.BlockSpec((n, 1), lambda b, i: (0, 0)),          # running max
-            pl.BlockSpec((n, 1), lambda b, i: (0, 0)),          # running argmax
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((n, 1), jnp.float32),
-            jax.ShapeDtypeStruct((n, 1), jnp.int32),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((block_s, s), jnp.int32),                # ppos_lo
-            pltpu.VMEM((block_s, s), jnp.int32),                # ppos_hi
-        ],
-        interpret=interpret,
-    )(pos, table, pst)
-    return val[:, 0], idx[:, 0]
+    n = table.shape[0]
+    return order_score_window_pallas(table, jnp.arange(n, dtype=jnp.int32),
+                                     pst, pos, block_s=block_s,
+                                     interpret=interpret)

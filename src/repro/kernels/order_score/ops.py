@@ -7,10 +7,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .kernel import NEG_INF, order_score_pallas
+from .kernel import NEG_INF, order_score_pallas, order_score_window_pallas
 from .ref import order_score_ref
 
-__all__ = ["order_score", "pad_for_kernel"]
+__all__ = ["order_score", "order_score_delta", "pad_for_kernel"]
 
 
 def pad_for_kernel(table: jnp.ndarray, pst: jnp.ndarray, block_s: int):
@@ -39,3 +39,35 @@ def order_score(table: jnp.ndarray, pst: jnp.ndarray, pos: jnp.ndarray, *,
     else:
         val, idx = order_score_ref(table, pst, pos)
     return val.sum(), idx, val
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_s", "use_pallas",
+                                             "interpret"))
+def order_score_delta(table: jnp.ndarray, pst: jnp.ndarray, pos: jnp.ndarray,
+                      prev_ls: jnp.ndarray, prev_idx: jnp.ndarray,
+                      lo: jnp.ndarray, *, window: int, block_s: int = 2048,
+                      use_pallas: bool = True, interpret: bool | None = None):
+    """Kernel-path incremental rescore (core/order_scoring.py docstring):
+    recomputes only the `window` nodes at positions [lo, lo+window-1] of the
+    proposed order via the windowed Pallas kernel, splices them into the
+    cached (prev_ls, prev_idx). Same (score, best_idx, best_ls) contract —
+    bitwise-consistent with the full `order_score` path (same tiles, same
+    fold, same tie-break)."""
+    from ...core.order_scoring import splice_window, window_nodes
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n = table.shape[0]
+    w = min(window, n)
+    tbl, ps = pad_for_kernel(table, pst, block_s)
+    win = window_nodes(pos, lo, w)
+    rows = tbl[win]
+    if use_pallas:
+        val, idx = order_score_window_pallas(rows, win, ps, pos,
+                                             block_s=block_s,
+                                             interpret=interpret)
+    else:
+        from ...core.order_scoring import _score_nodes_blocked
+        val, idx = _score_nodes_blocked(rows, win, ps, pos,
+                                        block=min(block_s, tbl.shape[1]))
+    return splice_window(prev_ls, prev_idx, win, val, idx)

@@ -25,11 +25,13 @@ from ..checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from ..core import (adjacency_from_best, build_score_table, mcmc_run,
                     random_cpts, roc_point)
 from ..core.mcmc import ChainState, exchange_best, init_chain, mcmc_step
-from ..core.order_scoring import score_order_blocked, score_order_sum
+from ..core.order_scoring import (delta_window, score_order_blocked,
+                                  score_order_delta, score_order_sum)
 from ..data.bn_sampler import ancestral_sample, inject_noise
 from ..data.networks import alarm_adjacency, stn_adjacency
 
-__all__ = ["LearnConfig", "learn_structure", "make_score_fn", "main"]
+__all__ = ["LearnConfig", "learn_structure", "make_score_fn",
+           "make_delta_fn", "main"]
 
 
 @dataclass
@@ -44,27 +46,61 @@ class LearnConfig:
     block: int = 4096             # score-table streaming block
     use_kernel: bool = False      # Pallas kernel (interpret=True on CPU)
     scorer: str = "max"           # "max" (paper Eq. 6) | "sum" (baseline [5])
+    window: int = 8               # bounded-move window; delta rescoring when
+                                  # 2 <= window <= DELTA_CROSSOVER*n (0 = off)
     checkpoint_every: int = 0     # 0 = off
     checkpoint_dir: str = ""
 
 
+def _padded(st, block: int):
+    """(table, pst, block) with S padded to a multiple of block — shared by
+    the full and delta closures so both see identical blocks."""
+    from ..core.sharded_scoring import pad_table
+    block = min(block, st.table.shape[1])
+    table, pst = pad_table(st.table, st.pst, block)
+    return table, pst, block
+
+
 def make_score_fn(st, cfg: LearnConfig):
     """(pos) -> (score, best_idx, best_ls) closure over the score table."""
-    S = st.table.shape[1]
-    block = min(cfg.block, S)
     if cfg.scorer == "sum":
         # the Linderman et al. [5] baseline the paper improves on (§III-B)
         return functools.partial(score_order_sum, st.table, st.pst)
     if cfg.use_kernel:
         from ..kernels.order_score import order_score
         return functools.partial(order_score, st.table, st.pst)
-    pad = (-S) % block
-    table, pst = st.table, st.pst
-    if pad:
-        from ..core.order_scoring import NEG_INF
-        table = jnp.pad(table, ((0, 0), (0, pad)), constant_values=NEG_INF)
-        pst = jnp.pad(pst, ((0, pad), (0, 0)), constant_values=-1)
+    table, pst, block = _padded(st, cfg.block)
     return functools.partial(score_order_blocked, table, pst, block=block)
+
+
+def make_delta_fn(st, cfg: LearnConfig):
+    """(window, delta_fn) for the incremental per-iteration path, or (0, None)
+    when it doesn't apply: sum scorer (logsumexp has no per-node max cache)
+    or a window the crossover heuristic rejects."""
+    if cfg.scorer == "sum":
+        return 0, None
+    n = st.table.shape[0]
+    w = delta_window(n, cfg.window)
+    if not w:
+        return 0, None
+    if cfg.use_kernel:
+        from ..kernels.order_score import order_score_delta
+        from ..kernels.order_score.ops import pad_for_kernel
+
+        # pre-pad once so the per-iteration call's pad is a no-op (the
+        # blocked path hoists its padding the same way via _padded)
+        ktable, kpst = pad_for_kernel(st.table, st.pst, 2048)
+
+        def kfn(pos, lo, prev_ls, prev_idx):
+            return order_score_delta(ktable, kpst, pos, prev_ls,
+                                     prev_idx, lo, window=w)
+        return w, kfn
+    table, pst, block = _padded(st, cfg.block)
+
+    def fn(pos, lo, prev_ls, prev_idx):
+        return score_order_delta(table, pst, pos, prev_ls, prev_idx, lo,
+                                 window=w, block=block)
+    return w, fn
 
 
 def learn_structure(data: np.ndarray, cfg: LearnConfig, *,
@@ -79,6 +115,7 @@ def learn_structure(data: np.ndarray, cfg: LearnConfig, *,
     t_pre = time.time() - t0
 
     score_fn = make_score_fn(st, cfg)
+    window, delta_fn = make_delta_fn(st, cfg)
     key = jax.random.key(cfg.seed)
 
     checkpointed = bool(cfg.checkpoint_every and cfg.checkpoint_dir)
@@ -86,13 +123,15 @@ def learn_structure(data: np.ndarray, cfg: LearnConfig, *,
     t0 = time.time()
     if not checkpointed:
         if cfg.chains == 1:
-            state, _ = mcmc_run(key, n, score_fn, cfg.iters)
+            state, _ = mcmc_run(key, n, score_fn, cfg.iters,
+                                delta_fn=delta_fn, window=window)
             best_score, best_idx = state.best_score, state.best_idx
             accepts = state.accepts
         else:
             keys = jax.random.split(key, cfg.chains)
             run = functools.partial(mcmc_run, n=n, score_fn=score_fn,
-                                    iters=cfg.iters)
+                                    iters=cfg.iters, delta_fn=delta_fn,
+                                    window=window)
             states, _ = jax.vmap(lambda k: run(k))(keys)
             best_score, best_idx, _ = exchange_best(states)
             accepts = states.accepts.sum()
@@ -118,7 +157,8 @@ def learn_structure(data: np.ndarray, cfg: LearnConfig, *,
         @jax.jit
         def run_segment(states):
             def body(st, _):
-                return jax.vmap(lambda s: mcmc_step(s, score_fn))(st), None
+                return jax.vmap(
+                    lambda s: mcmc_step(s, score_fn, delta_fn, window))(st), None
             states, _ = jax.lax.scan(body, states, None, length=seg)
             return states
 
@@ -134,6 +174,7 @@ def learn_structure(data: np.ndarray, cfg: LearnConfig, *,
     total_prop = cfg.iters * max(cfg.chains, 1)
     return {
         "adjacency": adj,
+        "delta_window": window,       # 0 = full rescore every iteration
         "score": float(best_score),
         "preprocess_s": t_pre,
         "iteration_s": t_iter,
@@ -161,6 +202,8 @@ def main(argv=None) -> dict:
     ap.add_argument("--noise", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--use-kernel", action="store_true")
+    ap.add_argument("--window", type=int, default=8,
+                    help="bounded-move window for delta rescoring (0 = full)")
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=0)
     args = ap.parse_args(argv)
@@ -171,17 +214,19 @@ def main(argv=None) -> dict:
                             args.noise, args.q)
     cfg = LearnConfig(q=args.q, s=args.s, iters=args.iters,
                       chains=args.chains, seed=args.seed,
-                      use_kernel=args.use_kernel,
+                      use_kernel=args.use_kernel, window=args.window,
                       checkpoint_dir=args.checkpoint_dir,
                       checkpoint_every=args.checkpoint_every)
     out = learn_structure(data, cfg)
     fp, tp = roc_point(out["adjacency"], truth)
     out["tp_rate"], out["fp_rate"] = tp, fp
+    mode = (f"delta(w={out['delta_window']})" if out["delta_window"]
+            else "full")
     print(f"{args.network}: n={truth.shape[0]} S={out['S']} "
           f"score={out['score']:.2f} TP={tp:.3f} FP={fp:.4f} "
           f"pre={out['preprocess_s']:.2f}s "
           f"iter={out['iteration_s']:.2f}s "
-          f"({out['per_iteration_s']*1e3:.2f} ms/it, "
+          f"({out['per_iteration_s']*1e3:.2f} ms/it, {mode}, "
           f"accept={out['accept_rate']:.2f})")
     return out
 

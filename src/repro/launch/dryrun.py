@@ -31,6 +31,7 @@ from ..configs import ARCH_IDS, cells, get_config, get_shape
 from ..models.layers import set_mesh
 from ..optim import AdamWConfig, adamw_init, opt_state_specs
 from .hlo_cost import analyze_hlo
+from ..runtime.jax_compat import mesh_context
 from .mesh import make_production_mesh
 from .roofline import model_flops_for, roofline_terms
 from .specs import build_step, input_specs
@@ -127,7 +128,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                          _sh(mesh, in_sp["tokens"]))
 
         t0 = time.time()
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             jitted = jax.jit(step, in_shardings=shardings)
             lowered = jitted.lower(*args)
             t_lower = time.time() - t0
@@ -193,6 +194,7 @@ def run_bn_cell(multi_pod: bool, *, n: int = 60, s: int = 4,
         pos=jax.ShapeDtypeStruct((C, n), jnp.int32),
         score=jax.ShapeDtypeStruct((C,), jnp.float32),
         cur_idx=jax.ShapeDtypeStruct((C, n), jnp.int32),
+        cur_ls=jax.ShapeDtypeStruct((C, n), jnp.float32),
         best_score=jax.ShapeDtypeStruct((C,), jnp.float32),
         best_idx=jax.ShapeDtypeStruct((C, n), jnp.int32),
         best_pos=jax.ShapeDtypeStruct((C, n), jnp.int32),
@@ -205,7 +207,7 @@ def run_bn_cell(multi_pod: bool, *, n: int = 60, s: int = 4,
     step = functools.partial(sharded_chain_step, mesh=mesh, block=block)
 
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         lowered = jax.jit(step, in_shardings=(
             st_sh, sh(P(None, "model")), sh(P("model", None)))) \
             .lower(states, table, pst)

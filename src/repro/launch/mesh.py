@@ -12,8 +12,7 @@ device state (required so smoke tests see 1 CPU device while the dry-run sees
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from ..runtime.jax_compat import make_auto_mesh
 
 __all__ = ["make_production_mesh", "make_local_mesh", "batch_axes_of"]
 
@@ -21,14 +20,12 @@ __all__ = ["make_production_mesh", "make_local_mesh", "batch_axes_of"]
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_auto_mesh(shape, axes)
 
 
 def make_local_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many real devices exist (tests/examples)."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_auto_mesh((data, model), ("data", "model"))
 
 
 def batch_axes_of(mesh) -> tuple[str, ...]:

@@ -1,5 +1,6 @@
 from .elastic import remesh_plan, reshard_tree
+from .jax_compat import make_auto_mesh, mesh_context
 from .straggler import StragglerPolicy, rebalance_chains
 
 __all__ = ["remesh_plan", "reshard_tree", "StragglerPolicy",
-           "rebalance_chains"]
+           "rebalance_chains", "make_auto_mesh", "mesh_context"]

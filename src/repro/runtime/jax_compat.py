@@ -1,0 +1,43 @@
+"""Version-portability shims for the handful of mesh APIs that moved between
+jax releases. The repo targets current jax; these keep it running (and the
+tier-1 suite green) on the 0.4.x line too.
+
+* ``AxisType``/``axis_types=`` (explicit-sharding meshes) appeared after
+  0.4.x — :func:`make_auto_mesh` passes them when the install supports them
+  and silently builds a plain mesh otherwise (Auto is the default semantics
+  for everything this repo does: shard_map gets its mesh explicitly).
+* ``jax.set_mesh`` replaced the ``with mesh:`` context —
+  :func:`mesh_context` returns whichever this install understands.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_auto_mesh", "mesh_context", "axis_size"]
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a mapped axis (jax.lax.axis_size where it exists)."""
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(axis_name)
+    from jax._src.core import get_axis_env
+    return get_axis_env().axis_size(axis_name)
+
+
+def make_auto_mesh(shape, axis_names):
+    """jax.make_mesh with Auto axis_types when this jax supports them."""
+    try:
+        from jax.sharding import AxisType
+        return jax.make_mesh(shape, axis_names,
+                             axis_types=(AxisType.Auto,) * len(axis_names))
+    except (ImportError, TypeError):
+        return jax.make_mesh(shape, axis_names)
+
+
+def mesh_context(mesh):
+    """Context manager installing `mesh` as the ambient mesh."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh            # Mesh is its own context manager on older jax

@@ -1,0 +1,89 @@
+"""Property-check shim: real `hypothesis` when installed, otherwise a
+seeded-random fallback, so the tier-1 suite collects and runs on a bare
+interpreter.
+
+Fallback semantics: ``@given(...)`` reruns the test body `max_examples` times
+(``settings`` records it; default 20) with values drawn from a deterministic
+per-test PRNG; ``hst.integers/floats/data`` cover the strategies the suite
+uses. Shrinking and statistics are hypothesis luxuries the fallback skips —
+on failure the example index and seed are printed so a case is reproducible.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as hst
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+    import random
+    import zlib
+    from types import SimpleNamespace
+
+    class _Integers:
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def example(self, rng):
+            return rng.randint(self.lo, self.hi)
+
+    class _Floats:
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def example(self, rng):
+            r = rng.random()
+            if r < 0.05:            # endpoints are the usual bug nests
+                return self.lo
+            if r > 0.95:
+                return self.hi
+            return self.lo + (self.hi - self.lo) * rng.random()
+
+    class _DataProxy:
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy, label=None):
+            return strategy.example(self._rng)
+
+    class _Data:
+        def example(self, rng):
+            return _DataProxy(rng)
+
+    hst = SimpleNamespace(
+        integers=lambda lo, hi: _Integers(lo, hi),
+        floats=lambda lo, hi: _Floats(lo, hi),
+        data=lambda: _Data(),
+    )
+
+    def settings(max_examples: int = 20, **_ignored):
+        def deco(fn):
+            fn._pc_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strats, **kwstrats):
+        def deco(fn):
+            # zero-arg wrapper: pytest must not mistake drawn args for
+            # fixtures (all @given tests here take drawn values only)
+            def wrapper():
+                n_ex = getattr(wrapper, "_pc_max_examples",
+                               getattr(fn, "_pc_max_examples", 20))
+                base = zlib.crc32(fn.__qualname__.encode())
+                for ex in range(n_ex):
+                    rng = random.Random(base + ex)
+                    try:
+                        fn(*[s.example(rng) for s in strats],
+                           **{k: s.example(rng) for k, s in kwstrats.items()})
+                    except BaseException:
+                        print(f"[_propcheck] falsified on example {ex} "
+                              f"(rng seed {base + ex})")
+                        raise
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            wrapper._pc_max_examples = getattr(fn, "_pc_max_examples", 20)
+            return wrapper
+        return deco

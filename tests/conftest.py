@@ -1,0 +1,73 @@
+"""Shared fixtures and suite-wide config.
+
+* forces JAX onto CPU (override with JAX_PLATFORMS=tpu on real hardware) —
+  the suite validates numerics; kernels run in interpret mode;
+* registers the `slow` marker: heavy/TPU-only tests skip cleanly off-TPU
+  unless RUN_SLOW=1;
+* small ALARM-like problem + seeded-key fixtures shared across modules.
+"""
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: heavy or TPU-only test (skipped off-TPU unless "
+                   "RUN_SLOW=1)")
+
+
+def pytest_collection_modifyitems(config, items):
+    import jax
+    if jax.default_backend() == "tpu" or os.environ.get("RUN_SLOW"):
+        return
+    skip = pytest.mark.skip(reason="slow/TPU-only (set RUN_SLOW=1 to force)")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip)
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    import jax
+    return jax.random.key(0)
+
+
+@pytest.fixture(scope="session")
+def alarm_like():
+    """Small ALARM-like problem: (score_table, true_adjacency). n=8, q=2,
+    s=3 — big enough for nontrivial parent sets, small enough for the CPU
+    suite."""
+    from repro.core import build_score_table, random_cpts, random_dag
+    from repro.data import ancestral_sample
+
+    rng = np.random.default_rng(0)
+    n, q, s, m = 8, 2, 3, 800
+    adj = random_dag(rng, n, s, 0.4)
+    cpts = random_cpts(rng, adj, q)
+    data = ancestral_sample(rng, adj, cpts, m, q)
+    return build_score_table(data, q=q, s=s), adj
+
+
+@pytest.fixture(scope="session")
+def padded_random_table():
+    """Synthetic (table, pst, block) padded for the blocked/delta scorers —
+    scoring cost and correctness depend only on (n, S), so random tables are
+    the right fixture for scorer-equivalence tests."""
+    import jax.numpy as jnp
+
+    from repro.core.combinatorics import build_pst, n_parent_sets
+    from repro.core.order_scoring import NEG_INF
+
+    n, s, block = 12, 3, 64
+    S = n_parent_sets(n - 1, s)
+    pst, _ = build_pst(n - 1, s)
+    rng = np.random.default_rng(42)
+    table = jnp.asarray(rng.normal(-40, 8, (n, S)).astype(np.float32))
+    pad = (-S) % block
+    table = jnp.pad(table, ((0, 0), (0, pad)), constant_values=NEG_INF)
+    pst = jnp.pad(jnp.asarray(pst), ((0, pad), (0, 0)), constant_values=-1)
+    return table, pst, block

@@ -3,8 +3,7 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as hst
+from _propcheck import given, hst, settings
 
 from repro.core.combinatorics import (build_pst, candidates_to_nodes,
                                       n_parent_sets, nodes_to_candidates,

@@ -1,0 +1,169 @@
+"""Incremental delta order-scoring ≡ full rescore (ISSUE 1 tentpole).
+
+The contract under test (core/order_scoring.py docstring): for ANY order and
+ANY bounded-window move, score_order_delta seeded with the previous order's
+(best_ls, best_idx) cache returns the SAME (score, best_idx, best_ls) —
+bitwise — as a from-scratch blocked rescore of the proposed order.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _propcheck import given, hst, settings
+
+from repro.core.combinatorics import build_pst, n_parent_sets
+from repro.core.mcmc import mcmc_run, propose_move
+from repro.core.order_scoring import (NEG_INF, delta_window,
+                                      score_order_blocked,
+                                      score_order_chunked, score_order_delta,
+                                      score_order_ref)
+
+
+@functools.lru_cache(maxsize=None)
+def _random_problem(n=12, s=3, block=64, seed=42):
+    """(table, pst) padded to a block multiple — cached so the 200-example
+    property test reuses one compiled scorer per (shape, window)."""
+    S = n_parent_sets(n - 1, s)
+    pst, _ = build_pst(n - 1, s)
+    rng = np.random.default_rng(seed)
+    table = jnp.asarray(rng.normal(-40, 8, (n, S)).astype(np.float32))
+    pad = (-S) % block
+    table = jnp.pad(table, ((0, 0), (0, pad)), constant_values=NEG_INF)
+    pst = jnp.pad(jnp.asarray(pst), ((0, pad), (0, 0)), constant_values=-1)
+    return table, pst
+
+
+@given(hst.integers(0, 2**31 - 1))
+@settings(max_examples=200, deadline=None)
+def test_delta_equals_full_rescore(seed):
+    """≥200 randomized (order, move) cases: delta result is bitwise equal to
+    a fresh full rescore — total, argmax parent sets, and per-node scores."""
+    block = 64
+    table, pst = _random_problem(block=block)
+    n = table.shape[0]
+    rng = np.random.default_rng(seed)
+    pos = jnp.asarray(rng.permutation(n).astype(np.int32))
+    w = int(rng.integers(2, 7))                 # all pass delta_window(12, ·)
+    _, idx0, ls0 = score_order_blocked(table, pst, pos, block=block)
+
+    new_pos, lo = propose_move(jax.random.key(seed), pos, window=w)
+    got = score_order_delta(table, pst, new_pos, ls0, idx0, lo,
+                            window=w, block=block)
+    want = score_order_blocked(table, pst, new_pos, block=block)
+    assert float(got[0]) == float(want[0])
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+    np.testing.assert_array_equal(np.asarray(got[2]), np.asarray(want[2]))
+
+
+@given(hst.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_blocked_chunked_ref_agree(seed):
+    """score_order_blocked == score_order_chunked == score_order_ref on
+    randomized (n, S, s) tables and random orders."""
+    shapes = ((8, 2, 16), (10, 3, 64), (12, 2, 32))
+    n, s, block = shapes[seed % len(shapes)]
+    S = n_parent_sets(n - 1, s)
+    pst, _ = build_pst(n - 1, s)
+    rng = np.random.default_rng(seed)
+    table = jnp.asarray(rng.normal(-30, 6, (n, S)).astype(np.float32))
+    pad = (-S) % block
+    tpad = jnp.pad(table, ((0, 0), (0, pad)), constant_values=NEG_INF)
+    ppad = jnp.pad(jnp.asarray(pst), ((0, pad), (0, 0)), constant_values=-1)
+    pos = jnp.asarray(rng.permutation(n).astype(np.int32))
+
+    ref = score_order_ref(table, jnp.asarray(pst), pos)
+    for fn in (score_order_chunked, score_order_blocked):
+        got = fn(tpad, ppad, pos, block=block)
+        np.testing.assert_allclose(float(got[0]), float(ref[0]), rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(ref[1]))
+        np.testing.assert_allclose(np.asarray(got[2]), np.asarray(ref[2]),
+                                   rtol=1e-6)
+
+
+@given(hst.integers(0, 2**31 - 1))
+@settings(max_examples=60, deadline=None)
+def test_propose_move_is_windowed_permutation(seed):
+    """Every move yields a valid permutation whose changes are confined to
+    positions [lo, lo+window-1] — the delta-scoring precondition."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(4, 16))
+    w = int(rng.integers(2, n + 1))
+    pos = jnp.asarray(rng.permutation(n).astype(np.int32))
+    new_pos, lo = propose_move(jax.random.key(seed), pos, window=w)
+    lo = int(lo)
+    assert sorted(np.asarray(new_pos).tolist()) == list(range(n))
+    assert 0 <= lo <= n - 1
+    for v in np.nonzero(np.asarray(new_pos) != np.asarray(pos))[0]:
+        assert lo <= int(pos[v]) <= lo + w - 1
+        assert lo <= int(new_pos[v]) <= lo + w - 1
+
+
+def test_mcmc_delta_chain_is_bitwise_identical(padded_random_table):
+    """Same key, same proposals: the delta-path chain and the full-rescore
+    chain traverse identical states for 300 iterations."""
+    table, pst, block = padded_random_table
+    n = table.shape[0]
+    fn = functools.partial(score_order_blocked, table, pst, block=block)
+
+    def dfn(pos, lo, prev_ls, prev_idx):
+        return score_order_delta(table, pst, pos, prev_ls, prev_idx, lo,
+                                 window=4, block=block)
+
+    a, _ = mcmc_run(jax.random.key(3), n, fn, 300, window=4)
+    b, _ = mcmc_run(jax.random.key(3), n, fn, 300, delta_fn=dfn, window=4)
+    assert float(a.score) == float(b.score)
+    assert float(a.best_score) == float(b.best_score)
+    assert int(a.accepts) == int(b.accepts)
+    np.testing.assert_array_equal(np.asarray(a.pos), np.asarray(b.pos))
+    np.testing.assert_array_equal(np.asarray(a.best_idx),
+                                  np.asarray(b.best_idx))
+    np.testing.assert_array_equal(np.asarray(a.cur_ls), np.asarray(b.cur_ls))
+
+
+def test_delta_window_crossover():
+    """The static heuristic: too-wide windows fall back to the full path."""
+    assert delta_window(64, 8) == 8
+    assert delta_window(12, 8) == 0      # 8 > 0.5 * 12
+    assert delta_window(12, 6) == 6
+    assert delta_window(100, 1) == 0     # window < 2 is not a move set
+    assert delta_window(100, 0) == 0
+
+
+def test_kernel_delta_matches_kernel_full(alarm_like):
+    """The windowed Pallas kernel (interpret mode) splices into the cache
+    exactly like the full kernel path."""
+    from repro.kernels.order_score import order_score, order_score_delta
+
+    st, _ = alarm_like
+    rng = np.random.default_rng(11)
+    for seed in range(3):
+        pos = jnp.asarray(rng.permutation(st.n).astype(np.int32))
+        _, idx0, ls0 = order_score(st.table, st.pst, pos, block_s=64,
+                                   interpret=True)
+        new_pos, lo = propose_move(jax.random.key(seed), pos, window=3)
+        got = order_score_delta(st.table, st.pst, new_pos, ls0, idx0, lo,
+                                window=3, block_s=64, interpret=True)
+        want = order_score(st.table, st.pst, new_pos, block_s=64,
+                           interpret=True)
+        np.testing.assert_allclose(float(got[0]), float(want[0]), rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+        np.testing.assert_allclose(np.asarray(got[2]), np.asarray(want[2]),
+                                   rtol=1e-6)
+
+
+@pytest.mark.slow
+def test_kernel_delta_compiled_on_tpu(alarm_like):
+    """Real-hardware run of the windowed kernel (skips off-TPU)."""
+    from repro.kernels.order_score import order_score, order_score_delta
+
+    st, _ = alarm_like
+    pos = jnp.asarray(np.arange(st.n, dtype=np.int32))
+    _, idx0, ls0 = order_score(st.table, st.pst, pos, interpret=False)
+    new_pos, lo = propose_move(jax.random.key(0), pos, window=4)
+    got = order_score_delta(st.table, st.pst, new_pos, ls0, idx0, lo,
+                            window=4, interpret=False)
+    want = order_score(st.table, st.pst, new_pos, interpret=False)
+    np.testing.assert_allclose(float(got[0]), float(want[0]), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))

@@ -6,8 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as hst
+from _propcheck import given, hst, settings
 
 from repro.core import build_score_table, random_cpts, random_dag
 from repro.core.order_scoring import score_order_ref

@@ -90,3 +90,51 @@ def test_determinism_same_key(problem):
     b, _ = mcmc_run(jax.random.key(9), st.n, sf, 200)
     assert float(a.best_score) == float(b.best_score)
     np.testing.assert_array_equal(np.asarray(a.pos), np.asarray(b.pos))
+
+
+# ------------------------------------------------- invariants (ISSUE 1)
+def test_chain_score_monotone_consistent_with_best(problem):
+    """best_score dominates every visited score AND the init score, on both
+    the legacy and the bounded-window move sets; accepts ≤ iters."""
+    st, _, sf = problem
+    for window in (0, 3):
+        state, trace = mcmc_run(jax.random.key(4), st.n, sf, 250, trace=True,
+                                window=window)
+        assert float(state.best_score) >= float(np.max(np.asarray(trace))) - 1e-4
+        assert float(state.best_score) >= float(state.score) - 1e-4
+        assert 0 <= int(state.accepts) <= 250
+
+
+def test_detailed_balance_smoke_flat_table(problem):
+    """Symmetric proposals ⇒ acceptance is the pure score ratio: on a
+    CONSTANT table the ratio is always 1, so every proposal must be accepted
+    (log u < 0 strictly, since u < 1). Holds for every move in the mixture."""
+    st, _, _ = problem
+    sf = lambda pos: (jnp.float32(0.0), jnp.zeros(st.n, jnp.int32),
+                      jnp.zeros(st.n, jnp.float32))
+    for window in (0, 4):
+        state, _ = mcmc_run(jax.random.key(5), st.n, sf, 200, window=window)
+        assert int(state.accepts) == 200
+
+
+def test_current_state_cache_matches_rescore(problem):
+    """(score, cur_idx, cur_ls) carried in ChainState always describe the
+    CURRENT order — the invariant the delta path relies on."""
+    st, _, sf = problem
+    state, _ = mcmc_run(jax.random.key(6), st.n, sf, 150, window=3)
+    sc, idx, ls = score_order_ref(st.table, st.pst, state.pos)
+    np.testing.assert_allclose(float(sc), float(state.score), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(state.cur_idx))
+    np.testing.assert_allclose(np.asarray(ls), np.asarray(state.cur_ls),
+                               rtol=1e-6)
+
+
+def test_exchange_best_returns_argmax_triple(problem):
+    """exchange_best hands back the winning chain's OWN (score, idx, pos)."""
+    st, _, sf = problem
+    states = mcmc_run_chains(jax.random.key(7), 4, st.n, sf, 150)
+    bs, bi, bp = exchange_best(states)
+    w = int(np.argmax(np.asarray(states.best_score)))
+    assert float(bs) == float(states.best_score[w])
+    np.testing.assert_array_equal(np.asarray(bi), np.asarray(states.best_idx[w]))
+    np.testing.assert_array_equal(np.asarray(bp), np.asarray(states.best_pos[w]))

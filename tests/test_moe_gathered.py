@@ -9,13 +9,12 @@ SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import dataclasses
     import jax, jax.numpy as jnp, numpy as np
-    from jax.sharding import AxisType
     from repro.configs import get_config
     from repro.models import Model
     from repro.models.layers import set_mesh
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    from repro.runtime.jax_compat import make_auto_mesh, mesh_context
+    mesh = make_auto_mesh((2, 4), ("data", "model"))
 
     for arch in ("granite-moe-3b-a800m", "arctic-480b"):
         cfg = get_config(arch).reduced()
@@ -32,7 +31,7 @@ SCRIPT = textwrap.dedent("""
         params = m0.init(jax.random.key(0))
         tok = jax.random.randint(jax.random.key(1), (B, T), 0, cfg.vocab)
         set_mesh(mesh)
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             a, _ = jax.jit(m0.forward)(params, tok)
             b, _ = jax.jit(m1.forward)(params, tok)
             np.testing.assert_allclose(

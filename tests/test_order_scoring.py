@@ -5,8 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as hst
+from _propcheck import given, hst, settings
 
 from repro.core import (adjacency_from_best, build_score_table, random_cpts,
                         random_dag, score_order_chunked, score_order_ref,

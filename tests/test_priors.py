@@ -3,8 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as hst
+from _propcheck import given, hst, settings
 
 from repro.core import (adjacency_from_best, build_score_table,
                         make_prior_matrix, mcmc_run, ppf, prior_table,

@@ -9,13 +9,12 @@ SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
-    from jax.sharding import AxisType
     from repro.configs import get_config
     from repro.models import Model
     from repro.models.layers import set_mesh
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    from repro.runtime.jax_compat import make_auto_mesh, mesh_context
+    mesh = make_auto_mesh((2, 4), ("data", "model"))
     cfg = get_config("rwkv6-7b").reduced()
     B, T = 2, 32                      # T/tp = 8 per shard, chunk 4
 
@@ -25,7 +24,7 @@ SCRIPT = textwrap.dedent("""
     tok = jax.random.randint(jax.random.key(1), (B, T), 0, cfg.vocab)
 
     set_mesh(mesh)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         # train-mode forward (no cache)
         a, _ = jax.jit(m_seq.forward)(params, tok)
         b, _ = jax.jit(m_sp.forward)(params, tok)

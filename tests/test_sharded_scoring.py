@@ -21,23 +21,64 @@ SCRIPT = textwrap.dedent("""
     table = jnp.asarray(rng.normal(-40, 8, (n, S)).astype(np.float32))
     pst = jnp.asarray(pst)
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.runtime.jax_compat import make_auto_mesh, mesh_context
+    mesh = make_auto_mesh((2, 4), ("data", "model"))
     fn = make_sharded_score_fn(table, pst, mesh, block=64)
 
     for seed in range(5):
         pos = jnp.asarray(np.random.default_rng(seed).permutation(n)
                           .astype(np.int32))
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             sc, idx, ls = jax.jit(fn)(pos)
         sc_ref, idx_ref, ls_ref = score_order_ref(table, pst, pos)
         np.testing.assert_allclose(float(sc), float(sc_ref), rtol=1e-6)
         np.testing.assert_array_equal(np.asarray(idx), np.asarray(idx_ref))
 
     # the full MCMC sampler runs on the sharded scorer unchanged
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         state, _ = mcmc_run(jax.random.key(0), n, fn, 50)
     assert np.isfinite(float(state.best_score))
+
+    # delta path: sharded incremental rescore == sharded full rescore,
+    # and the delta-path chain is step-for-step identical to the full one
+    from repro.core.mcmc import propose_move
+    from repro.core.sharded_scoring import make_sharded_delta_fn
+    dfn = make_sharded_delta_fn(table, pst, mesh, window=4, block=64)
+    for seed in range(5):
+        pos = jnp.asarray(np.random.default_rng(100 + seed).permutation(n)
+                          .astype(np.int32))
+        with mesh_context(mesh):
+            sc0, idx0, ls0 = jax.jit(fn)(pos)
+        new_pos, lo = propose_move(jax.random.key(seed), pos, window=4)
+        with mesh_context(mesh):
+            got = jax.jit(dfn)(new_pos, lo, ls0, idx0)
+            want = jax.jit(fn)(new_pos)
+        np.testing.assert_allclose(float(got[0]), float(want[0]), rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+
+    with mesh_context(mesh):
+        a, _ = mcmc_run(jax.random.key(1), n, fn, 40, window=4)
+        b, _ = mcmc_run(jax.random.key(1), n, fn, 40, delta_fn=dfn, window=4)
+    assert float(a.score) == float(b.score)
+    np.testing.assert_array_equal(np.asarray(a.pos), np.asarray(b.pos))
+    assert int(a.accepts) == int(b.accepts)
+
+    # sharded_chain_step's fused delta path == per-chain full-rescore steps
+    from repro.core.mcmc import init_chain, mcmc_step
+    from repro.core.sharded_scoring import sharded_chain_step
+    tpad, ppad = pad_table(table, pst, 4 * 64)
+    keys = jax.random.split(jax.random.key(2), 8)
+    with mesh_context(mesh):
+        states = jax.vmap(lambda k: init_chain(k, n, fn))(keys)
+        sd = sl = states
+        for _ in range(3):
+            sd = sharded_chain_step(sd, tpad, ppad, mesh, block=64, window=4)
+            sl = jax.vmap(lambda s: mcmc_step(s, fn, None, 4))(sl)
+    np.testing.assert_array_equal(np.asarray(sd.pos), np.asarray(sl.pos))
+    np.testing.assert_allclose(np.asarray(sd.score), np.asarray(sl.score),
+                               rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(sd.accepts),
+                                  np.asarray(sl.accepts))
     print("OK")
 """)
 
