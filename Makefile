@@ -2,13 +2,20 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test bench-smoke bench-delta
+.PHONY: test bench-smoke bench-delta bench-preprocess bench-preprocess-smoke
 
 test:
 	$(PY) -m pytest -q
 
 bench-smoke:
 	$(PY) benchmarks/delta_vs_full.py --smoke
+	$(PY) benchmarks/preprocess_bench.py --smoke
 
 bench-delta:
 	$(PY) benchmarks/delta_vs_full.py
+
+bench-preprocess:
+	$(PY) benchmarks/preprocess_bench.py
+
+bench-preprocess-smoke:
+	$(PY) benchmarks/preprocess_bench.py --smoke

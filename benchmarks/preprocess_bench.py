@@ -1,0 +1,88 @@
+"""Dense loop vs fused preprocessing pipeline (ISSUE 2 tentpole).
+
+Preprocessing is the end-to-end bottleneck at n >= 37 now that MCMC
+iterations are O(window*S) (PR 1). This harness times full score-table
+construction both ways on identical data:
+
+* dense:  core/scores.build_score_table — the oracle host loop (per-node
+  batched chunk launches, per-node one-hot rebuilds);
+* fused:  preprocess.build_score_table_fused — count each column subset once
+  against all n children, LUT-score in the same pass, rank-gather assembly.
+
+and reports the speedup plus the max absolute score deviation (gate: >= 3x
+at n = 64 and <= 1e-4 error; the fused path is bitwise-equal on CPU).
+
+  PYTHONPATH=src python benchmarks/preprocess_bench.py [--smoke] [--samples M]
+
+Emits experiments/bench/BENCH_preprocess.json.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+try:
+    from .common import emit, timeit
+except ImportError:                      # run as a plain script
+    import os
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from common import emit, timeit
+
+from repro.core.combinatorics import n_parent_sets
+from repro.core.scores import build_score_table
+from repro.preprocess import build_score_table_fused
+
+# (n, q, s): s shrinks as n grows to keep the dense baseline's wall clock
+# tractable on CPU — the fused/dense ratio only grows with S.
+SIZES = [(16, 2, 3), (37, 2, 3), (64, 2, 2)]
+SMOKE_SIZES = [(16, 2, 2)]
+
+
+def bench_size(n: int, q: int, s: int, m: int) -> dict:
+    rng = np.random.default_rng(n)
+    data = rng.integers(0, q, size=(m, n)).astype(np.int32)
+
+    def run_dense():
+        return build_score_table(data, q=q, s=s).table
+
+    def run_fused():
+        return build_score_table_fused(data, q=q, s=s).table
+
+    # correctness first — never time a wrong result
+    err = float(np.abs(np.asarray(run_fused()) - np.asarray(run_dense())).max())
+    assert err <= 1e-4, f"fused deviates from oracle by {err}"
+
+    t_dense = timeit(run_dense)
+    t_fused = timeit(run_fused)
+    return {
+        "n": n, "q": q, "s": s, "m": m, "S": n_parent_sets(n - 1, s),
+        "dense_s": t_dense,
+        "fused_s": t_fused,
+        "speedup": t_dense / t_fused,
+        "max_abs_err": err,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny size — CI wiring check, seconds")
+    ap.add_argument("--samples", type=int, default=400)
+    args = ap.parse_args(argv)
+
+    sizes = SMOKE_SIZES if args.smoke else SIZES
+    m = 100 if args.smoke else args.samples
+    rows = [bench_size(n, q, s, m) for (n, q, s) in sizes]
+    emit("BENCH_preprocess", rows)
+    if not args.smoke:
+        last = rows[-1]
+        print(f"\nn={last['n']}: fused preprocessing is "
+              f"{last['speedup']:.1f}x the dense loop "
+              f"(target >= 3x, max err {last['max_abs_err']:.1e})")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,7 @@
 """End-to-end driver on the paper's 37-node ALARM network (§VI, Table IV),
-with checkpoint/restart fault tolerance demonstrated mid-run.
+with checkpoint/restart fault tolerance demonstrated mid-run. Preprocessing
+goes through the fused pipeline (preprocess/, ~20x the reference loop at this
+size — pass --preprocess reference to compare).
 
   PYTHONPATH=src python examples/learn_alarm.py [--iters 2000] [--chains 4]
 """
@@ -23,6 +25,8 @@ def main():
     ap.add_argument("--window", type=int, default=8,
                     help="bounded-move window; delta rescoring recomputes "
                          "only these nodes per iteration (0 = full rescore)")
+    ap.add_argument("--preprocess", default="fused",
+                    choices=["fused", "reference"])
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
@@ -32,7 +36,7 @@ def main():
 
     ckpt_dir = tempfile.mkdtemp(prefix="alarm_ckpt_")
     cfg = LearnConfig(q=2, s=4, iters=args.iters, chains=args.chains,
-                      window=args.window,
+                      window=args.window, preprocess=args.preprocess,
                       checkpoint_every=max(args.iters // 4, 1),
                       checkpoint_dir=ckpt_dir)
 

@@ -5,22 +5,28 @@ table (Eq. 4), pairwise priors (Eq. 10), and parent-set-table task decomposition
 (§V) — adapted for TPU (DESIGN.md §2).
 """
 from .combinatorics import (build_pst, n_parent_sets, rank_combination,
-                            rank_parent_set, unrank_combination)
+                            rank_combinations_batch, rank_parent_set,
+                            unrank_combination)
 from .graph import adjacency_from_best, random_cpts, random_dag, topological_order
 from .mcmc import (ChainState, exchange_best, init_chain, mcmc_run,
                    mcmc_run_chains, mcmc_step, propose_move)
 from .metrics import roc_point, structural_hamming
 from .order_scoring import (NEG_INF, delta_window, score_order_chunked,
-                            score_order_delta, score_order_ref)
+                            score_order_delta, score_order_pruned,
+                            score_order_pruned_delta, score_order_ref)
 from .priors import make_prior_matrix, ppf, ppf_ln, prior_table
-from .scores import ScoreTable, build_score_table, score_single
+from .scores import (ScoreTable, build_score_table, score_single,
+                     validate_prior_matrix)
 
 __all__ = [
-    "build_pst", "n_parent_sets", "rank_combination", "rank_parent_set",
+    "build_pst", "n_parent_sets", "rank_combination",
+    "rank_combinations_batch", "rank_parent_set",
     "unrank_combination", "adjacency_from_best", "random_cpts", "random_dag",
     "topological_order", "ChainState", "exchange_best", "init_chain", "mcmc_run",
     "mcmc_run_chains", "mcmc_step", "propose_move", "roc_point",
     "structural_hamming", "NEG_INF", "delta_window", "score_order_chunked",
-    "score_order_delta", "score_order_ref", "make_prior_matrix", "ppf",
+    "score_order_delta", "score_order_pruned", "score_order_pruned_delta",
+    "score_order_ref", "make_prior_matrix", "ppf",
     "ppf_ln", "prior_table", "ScoreTable", "build_score_table", "score_single",
+    "validate_prior_matrix",
 ]

@@ -32,6 +32,7 @@ __all__ = [
     "binom_table",
     "unrank_combination",
     "rank_combination",
+    "rank_combinations_batch",
     "build_pst",
     "rank_parent_set",
     "candidates_to_nodes",
@@ -104,6 +105,37 @@ def rank_combination(n: int, comb: np.ndarray) -> int:
             rank += math.comb(n_rest - step, remaining - 1)
         low = int(a)
     return rank
+
+
+def rank_combinations_batch(n: int, s: int, rows: np.ndarray,
+                            sizes: np.ndarray) -> np.ndarray:
+    """Vectorized :func:`rank_parent_set` over arbitrarily-shaped batches.
+
+    rows: (..., s) sorted element indices over {0..n-1}, padded with -1 at the
+    tail; sizes: (...) set sizes. Returns (...) int64 global indices into the
+    size-ascending :func:`build_pst`(n, s) ordering.
+
+    Uses the hockey-stick identity to collapse :func:`rank_combination`'s inner
+    loop:  sum_{x=a}^{b} C(n-1-x, r) = C(n-a, r+1) - C(n-1-b, r+1), so the lex
+    rank of {c_0 < ... < c_{k-1}} is  sum_j [C(n-1-c_{j-1}, k-j) - C(n-c_j, k-j)]
+    with c_{-1} = -1. O(s) table lookups per row, no Python per-row loop —
+    this is what makes the preprocess/ assembly gather map cheap to build.
+    """
+    rows = np.asarray(rows, dtype=np.int64)
+    sizes = np.asarray(sizes, dtype=np.int64)
+    B = binom_table(n + 1, s + 1)
+    off = size_offsets(n, s)
+    j = np.arange(rows.shape[-1])
+    valid = j < sizes[..., None]
+    prev = np.concatenate(
+        [np.full(rows.shape[:-1] + (1,), -1, np.int64), rows[..., :-1]],
+        axis=-1)
+    c = np.where(valid, rows, 0)
+    p = np.where(valid, prev, 0)
+    r = np.where(valid, sizes[..., None] - j, 1)      # k - j for each position
+    term = (B[np.clip(n - 1 - p, 0, n), np.clip(r, 0, s + 1)]
+            - B[np.clip(n - c, 0, n), np.clip(r, 0, s + 1)])
+    return off[sizes] + np.where(valid, term, 0).sum(-1)
 
 
 def build_pst(n_candidates: int, s: int) -> tuple[np.ndarray, np.ndarray]:

@@ -47,6 +47,13 @@ ScoreFn = Callable[[jnp.ndarray], tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]]
 DeltaFn = Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray],
                    tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]]
 # (new_pos (n,), lo, prev_ls (n,), prev_idx (n,)) -> same triple
+#
+# The sampler is representation-agnostic: both callables close over EITHER a
+# dense core.scores.ScoreTable (score_order_blocked / the Pallas kernel /
+# the sharded scorer) or a preprocess.SparseScoreTable (score_order_pruned,
+# O(n*K)); best_idx is a global PST rank in every case, so best-graph
+# tracking and adjacency recovery are identical. launch/bn_learn.make_score_fn
+# and make_delta_fn do the dispatch.
 
 
 class ChainState(NamedTuple):

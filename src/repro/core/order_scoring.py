@@ -52,6 +52,7 @@ NEG_INF = jnp.float32(-3.0e38)
 
 __all__ = ["consistent_mask", "score_order_ref", "score_order_chunked",
            "score_order_blocked", "score_order_sum", "score_order_delta",
+           "score_order_pruned", "score_order_pruned_delta",
            "delta_window", "inverse_permutation", "window_nodes",
            "splice_window", "DELTA_CROSSOVER", "NEG_INF"]
 
@@ -226,6 +227,63 @@ def score_order_delta(table: jnp.ndarray, pst: jnp.ndarray, pos: jnp.ndarray,
     win = window_nodes(pos, lo, w)                        # (w,) node ids
     rows = table[win]                                     # (w, S)
     ls_w, idx_w = _score_nodes_blocked(rows, win, pst, pos, block=block)
+    return splice_window(prev_ls, prev_idx, win, ls_w, idx_w)
+
+
+def _score_nodes_pruned(kept_ls: jnp.ndarray, kept_parents: jnp.ndarray,
+                        kept_idx: jnp.ndarray, node_ids: jnp.ndarray,
+                        pos: jnp.ndarray):
+    """Masked max+argmax over per-node PRUNED candidate lists (the sparse
+    hot path — O(K) per node instead of O(S)).
+
+    kept_ls: (k, K) scores (NEG_INF pad); kept_parents: (k, K, s) parent NODE
+    ids (-1 pad — already node-mapped at build, unlike the shared PST);
+    kept_idx: (k, K) global PST ranks (the contract's best_idx space).
+    Rows align with node_ids. Returns (best_ls (k,), best_idx (k,)).
+    """
+    def per_node(i, ls_row, par_row, idx_row):
+        ppos = pos[jnp.clip(par_row, 0)]                     # (K, s)
+        ok = jnp.where(par_row < 0, True, ppos < pos[i])
+        masked = jnp.where(jnp.all(ok, axis=-1), ls_row, NEG_INF)
+        a = jnp.argmax(masked)                               # first-wins ties
+        return masked[a], idx_row[a]
+
+    best_ls, best_idx = jax.vmap(per_node)(node_ids, kept_ls, kept_parents,
+                                           kept_idx)
+    return best_ls, best_idx.astype(jnp.int32)
+
+
+@jax.jit
+def score_order_pruned(kept_ls: jnp.ndarray, kept_parents: jnp.ndarray,
+                       kept_idx: jnp.ndarray, pos: jnp.ndarray):
+    """score_order over a preprocess.SparseScoreTable's packed arrays — the
+    same (score, best_idx, best_ls) contract as score_order_blocked, with
+    best_idx in the global PST rank space.
+
+    Exactness: equals the dense scorer whenever each node's dense-consistent
+    argmax survived pruning (always true for delta = +inf; the empty set is
+    always kept so the result is defined for every order). See
+    preprocess/sparse.py for the guarantee statement and its tests."""
+    n = pos.shape[0]
+    best_ls, best_idx = _score_nodes_pruned(kept_ls, kept_parents, kept_idx,
+                                            jnp.arange(n, dtype=jnp.int32),
+                                            pos)
+    return best_ls.sum(), best_idx, best_ls
+
+
+@functools.partial(jax.jit, static_argnames=("window",))
+def score_order_pruned_delta(kept_ls: jnp.ndarray, kept_parents: jnp.ndarray,
+                             kept_idx: jnp.ndarray, pos: jnp.ndarray,
+                             prev_ls: jnp.ndarray, prev_idx: jnp.ndarray,
+                             lo: jnp.ndarray, *, window: int):
+    """Incremental companion of score_order_pruned: O(window*K) per move,
+    spliced through the same splice_window as every other delta path so
+    delta == full holds bitwise within the pruned representation."""
+    n = pos.shape[0]
+    w = min(window, n)
+    win = window_nodes(pos, lo, w)
+    ls_w, idx_w = _score_nodes_pruned(kept_ls[win], kept_parents[win],
+                                      kept_idx[win], win, pos)
     return splice_window(prev_ls, prev_idx, win, ls_w, idx_w)
 
 

@@ -1,5 +1,6 @@
 from .bn_sampler import ancestral_sample, inject_noise
-from .networks import ALARM_EDGES, STN_EDGES, alarm_adjacency, stn_adjacency
+from .networks import (ALARM_EDGES, STN_EDGES, alarm_adjacency,
+                       stn_adjacency, synthetic_adjacency)
 
 __all__ = ["ancestral_sample", "inject_noise", "ALARM_EDGES", "STN_EDGES",
-           "alarm_adjacency", "stn_adjacency"]
+           "alarm_adjacency", "stn_adjacency", "synthetic_adjacency"]

@@ -25,7 +25,13 @@ def _count_kernel(codes_ref, child_oh_ref, out_ref, *, Q: int, block_m: int):
         out_ref[...] = jnp.zeros_like(out_ref)
 
     codes = codes_ref[0, :]                      # (BM,) int32, -1 = padding
-    child = child_oh_ref[...]                    # (BM, q) f32
+    # mask padded rows out of the child one-hot BEFORE the contraction: the
+    # code side is all-zero there, but correctness must not hinge on the
+    # caller having zero-padded child_oh (a one-hot built from a 0-padded
+    # child array has VALID-looking rows in the pad region and would
+    # otherwise corrupt counts whenever m % block_m != 0)
+    valid = codes >= 0
+    child = jnp.where(valid[:, None], child_oh_ref[...], 0.0)   # (BM, q) f32
     bins = jax.lax.broadcasted_iota(jnp.int32, (block_m, Q), 1)
     oh = (codes[:, None] == bins).astype(jnp.float32)   # (BM, Q); pad rows all-0
     # MXU contraction over samples: (Q, BM) @ (BM, q)

@@ -37,6 +37,9 @@ def count_contingency(data_ext: jnp.ndarray, child: jnp.ndarray,
     m = codes.shape[1]
     pad = (-m) % block_m
     if pad:
+        # codes pad with -1 marks the rows as invalid; the kernel masks the
+        # child one-hot by that marker, so the child_oh pad VALUE is
+        # irrelevant (zeros here only for cleanliness)
         codes = jnp.pad(codes, ((0, 0), (0, pad)), constant_values=-1)
         child_oh = jnp.pad(child_oh, ((0, pad), (0, 0)))
     return count_pallas(codes, child_oh, Q=Q, block_m=block_m,

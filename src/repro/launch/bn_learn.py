@@ -4,6 +4,14 @@ pipeline, Fig. 2): preprocess → multi-chain order-MCMC → best-graph exchange
 Usage (also the library entry point used by examples/ and benchmarks/):
 
   python -m repro.launch.bn_learn --network alarm --iters 2000 --chains 4
+  python -m repro.launch.bn_learn --network synth --n 64 --s 3 \
+      --preprocess fused --prune-delta 30        # fused pipeline + compression
+
+--preprocess fused routes score-table construction through preprocess/
+(count-once-per-subset + LUT scoring, ~20x the reference loop at n = 64 on
+CPU) with a disk cache (--cache-dir) so repeat runs skip the stage entirely;
+--prune-delta > 0 additionally hash-compresses the table to per-node score
+lists, and the MCMC hot path switches to the O(n*K) pruned scorer.
 
 Chains are embarrassingly parallel (DP over the data/pod mesh axes at scale,
 vmap locally); the best-graph exchange at the end is the same max+argmax
@@ -26,9 +34,12 @@ from ..core import (adjacency_from_best, build_score_table, mcmc_run,
                     random_cpts, roc_point)
 from ..core.mcmc import ChainState, exchange_best, init_chain, mcmc_step
 from ..core.order_scoring import (delta_window, score_order_blocked,
-                                  score_order_delta, score_order_sum)
+                                  score_order_delta, score_order_pruned,
+                                  score_order_pruned_delta, score_order_sum)
 from ..data.bn_sampler import ancestral_sample, inject_noise
-from ..data.networks import alarm_adjacency, stn_adjacency
+from ..data.networks import (alarm_adjacency, stn_adjacency,
+                             synthetic_adjacency)
+from ..preprocess import SparseScoreTable, build_score_table_fused
 
 __all__ = ["LearnConfig", "learn_structure", "make_score_fn",
            "make_delta_fn", "main"]
@@ -50,6 +61,12 @@ class LearnConfig:
                                   # 2 <= window <= DELTA_CROSSOVER*n (0 = off)
     checkpoint_every: int = 0     # 0 = off
     checkpoint_dir: str = ""
+    preprocess: str = "reference"  # "reference" (core/scores host loop) |
+                                   # "fused" (preprocess/ pipeline)
+    prune_delta: float = 0.0      # > 0: hash-compress the table, keeping per
+                                  # node only parent sets within this delta
+                                  # of its best (fused pipeline only)
+    cache_dir: str = ""           # preprocessing disk cache ("" = off)
 
 
 def _padded(st, block: int):
@@ -62,7 +79,17 @@ def _padded(st, block: int):
 
 
 def make_score_fn(st, cfg: LearnConfig):
-    """(pos) -> (score, best_idx, best_ls) closure over the score table."""
+    """(pos) -> (score, best_idx, best_ls) closure over either table
+    representation: dense ScoreTable (blocked/kernel scorers) or
+    preprocess.SparseScoreTable (packed pruned scorer, O(n*K))."""
+    if isinstance(st, SparseScoreTable):
+        if cfg.scorer == "sum":
+            raise ValueError(
+                "the sum (logsumexp) baseline scorer needs the dense table: "
+                "run without --prune-delta (pruned entries would silently "
+                "drop out of the logsumexp)")
+        return functools.partial(score_order_pruned, st.kept_ls,
+                                 st.kept_parents, st.kept_idx)
     if cfg.scorer == "sum":
         # the Linderman et al. [5] baseline the paper improves on (§III-B)
         return functools.partial(score_order_sum, st.table, st.pst)
@@ -79,10 +106,17 @@ def make_delta_fn(st, cfg: LearnConfig):
     or a window the crossover heuristic rejects."""
     if cfg.scorer == "sum":
         return 0, None
-    n = st.table.shape[0]
+    n = st.n if isinstance(st, SparseScoreTable) else st.table.shape[0]
     w = delta_window(n, cfg.window)
     if not w:
         return 0, None
+    if isinstance(st, SparseScoreTable):
+        kept = (st.kept_ls, st.kept_parents, st.kept_idx)
+
+        def sfn(pos, lo, prev_ls, prev_idx):
+            return score_order_pruned_delta(*kept, pos, prev_ls, prev_idx,
+                                            lo, window=w)
+        return w, sfn
     if cfg.use_kernel:
         from ..kernels.order_score import order_score_delta
         from ..kernels.order_score.ops import pad_for_kernel
@@ -109,9 +143,19 @@ def learn_structure(data: np.ndarray, cfg: LearnConfig, *,
     per_iteration_s, accept_rate}."""
     n = data.shape[1]
     t0 = time.time()
-    st = build_score_table(data, q=cfg.q, s=cfg.s, gamma=cfg.gamma,
-                           ess=cfg.ess, prior_matrix=prior_matrix)
-    jax.block_until_ready(st.table)
+    cache_hit = False
+    if cfg.preprocess == "fused":
+        st, pre_info = build_score_table_fused(
+            data, q=cfg.q, s=cfg.s, gamma=cfg.gamma, ess=cfg.ess,
+            prior_matrix=prior_matrix,
+            prune_delta=cfg.prune_delta if cfg.prune_delta > 0 else None,
+            cache_dir=cfg.cache_dir or None, return_info=True)
+        cache_hit = pre_info["cache_hit"]
+    else:
+        st = build_score_table(data, q=cfg.q, s=cfg.s, gamma=cfg.gamma,
+                               ess=cfg.ess, prior_matrix=prior_matrix)
+    jax.block_until_ready(st.kept_ls if isinstance(st, SparseScoreTable)
+                          else st.table)
     t_pre = time.time() - t0
 
     score_fn = make_score_fn(st, cfg)
@@ -177,6 +221,7 @@ def learn_structure(data: np.ndarray, cfg: LearnConfig, *,
         "delta_window": window,       # 0 = full rescore every iteration
         "score": float(best_score),
         "preprocess_s": t_pre,
+        "preprocess_cache_hit": cache_hit,
         "iteration_s": t_iter,
         "per_iteration_s": t_iter / max(cfg.iters, 1),
         "accept_rate": float(accepts) / max(total_prop, 1),
@@ -184,16 +229,24 @@ def learn_structure(data: np.ndarray, cfg: LearnConfig, *,
     }
 
 
-def _network_data(name: str, m: int, q: int, seed: int):
+def _network_data(name: str, m: int, q: int, seed: int, n_synth: int = 64):
     rng = np.random.default_rng(seed)
-    adj = {"alarm": alarm_adjacency, "stn": stn_adjacency}[name]()
+    if name == "synth":
+        # synthetic scale-benchmark network (n defaults to 64 — past the
+        # paper's headline n > 60 claim)
+        adj = synthetic_adjacency(rng, n_synth)
+    else:
+        adj = {"alarm": alarm_adjacency, "stn": stn_adjacency}[name]()
     cpts = random_cpts(rng, adj, q)
     return adj, ancestral_sample(rng, adj, cpts, m, q)
 
 
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--network", default="alarm", choices=["alarm", "stn"])
+    ap.add_argument("--network", default="alarm",
+                    choices=["alarm", "stn", "synth"])
+    ap.add_argument("--n", type=int, default=64,
+                    help="node count for --network synth")
     ap.add_argument("--samples", type=int, default=1000)
     ap.add_argument("--iters", type=int, default=1000)
     ap.add_argument("--chains", type=int, default=1)
@@ -204,17 +257,33 @@ def main(argv=None) -> dict:
     ap.add_argument("--use-kernel", action="store_true")
     ap.add_argument("--window", type=int, default=8,
                     help="bounded-move window for delta rescoring (0 = full)")
+    ap.add_argument("--preprocess", default="reference",
+                    choices=["reference", "fused"],
+                    help="score-table construction: core/scores host loop or "
+                         "the fused preprocess/ pipeline")
+    ap.add_argument("--prune-delta", type=float, default=0.0,
+                    help="> 0: hash-compress the score table, keeping per "
+                         "node only parent sets within this delta of its "
+                         "best (fused preprocessing only)")
+    ap.add_argument("--cache-dir", default="experiments/score_cache",
+                    help="preprocessing disk cache directory ('' disables); "
+                         "only consulted with --preprocess fused")
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=0)
     args = ap.parse_args(argv)
 
-    truth, data = _network_data(args.network, args.samples, args.q, args.seed)
+    truth, data = _network_data(args.network, args.samples, args.q, args.seed,
+                                n_synth=args.n)
     if args.noise:
         data = inject_noise(np.random.default_rng(args.seed + 1), data,
                             args.noise, args.q)
     cfg = LearnConfig(q=args.q, s=args.s, iters=args.iters,
                       chains=args.chains, seed=args.seed,
                       use_kernel=args.use_kernel, window=args.window,
+                      preprocess=args.preprocess,
+                      prune_delta=args.prune_delta,
+                      cache_dir=(args.cache_dir if args.preprocess == "fused"
+                                 else ""),
                       checkpoint_dir=args.checkpoint_dir,
                       checkpoint_every=args.checkpoint_every)
     out = learn_structure(data, cfg)
@@ -222,9 +291,13 @@ def main(argv=None) -> dict:
     out["tp_rate"], out["fp_rate"] = tp, fp
     mode = (f"delta(w={out['delta_window']})" if out["delta_window"]
             else "full")
+    pre = f"pre={out['preprocess_s']:.2f}s"
+    if args.preprocess == "fused":
+        pre += " (fused, cache hit)" if out["preprocess_cache_hit"] \
+            else " (fused)"
     print(f"{args.network}: n={truth.shape[0]} S={out['S']} "
           f"score={out['score']:.2f} TP={tp:.3f} FP={fp:.4f} "
-          f"pre={out['preprocess_s']:.2f}s "
+          f"{pre} "
           f"iter={out['iteration_s']:.2f}s "
           f"({out['per_iteration_s']*1e3:.2f} ms/it, {mode}, "
           f"accept={out['accept_rate']:.2f})")

@@ -1,0 +1,47 @@
+"""GPU-resident preprocessing subsystem (paper §III-A / §III-B).
+
+The paper splits structure learning into a *preprocessing* stage — compute
+every local score ls(i, pi) for |pi| <= s and store it in a hash table
+(§III-A) — and an MCMC stage that only reads the table (§III-B). After PR 1
+made the MCMC iteration O(window*S), preprocessing became the end-to-end
+wall-clock bottleneck (the paper's own future work, §VII: move counting onto
+the accelerator). This package is that stage, organised by paper section:
+
+==================  =========================================================
+module              paper mapping
+==================  =========================================================
+fused.py            §III-A counting + Eq. 4 scoring fused into one pass:
+                    each column subset is counted ONCE against all n children
+                    (one matmul) and scored in-register via gammaln lookup
+                    tables / in-VMEM gammaln (Pallas kernel), so the
+                    (C, q^s, q) contingency tensor never reaches HBM.
+planner.py          §III-B task assignment: work units weighted by the
+                    paper's q^{|pi|}*m cost estimate and LPT-balanced across
+                    devices (the GPU-block task table, promoted to a mesh).
+sparse.py           §III-A memory-saving strategy: per-node score lists
+                    pruned to a delta of the node's best, stored in an
+                    open-addressing hash table (the paper's chained hash
+                    buckets, TPU-vectorized) + packed lists for the
+                    order-scoring hot path, with an exact dense fallback.
+cache.py            preprocessing disk cache keyed on (data, q, s, ess,
+                    gamma, prior): repeated bn_learn runs skip the stage.
+pipeline.py         the driver: cache -> plan -> fused pass -> rank-gather
+                    assembly (the rank IS the hash address, core/
+                    combinatorics) -> optional pruning.
+==================  =========================================================
+
+core/scores.build_score_table remains the oracle; tests/test_preprocess.py
+pins fused == oracle to <= 1e-4 absolute (bitwise on CPU) and
+benchmarks/preprocess_bench.py tracks the >= 3x n = 64 speedup gate.
+"""
+from .fused import fused_scores_pallas, fused_scores_ref, score_luts
+from .pipeline import assemble_table, build_score_table_fused
+from .planner import PreprocessPlan, assign_chunks, chunk_costs, plan_preprocess
+from .sparse import SparseScoreTable, prune_table
+
+__all__ = [
+    "build_score_table_fused", "assemble_table",
+    "fused_scores_ref", "fused_scores_pallas", "score_luts",
+    "PreprocessPlan", "plan_preprocess", "assign_chunks", "chunk_costs",
+    "SparseScoreTable", "prune_table",
+]

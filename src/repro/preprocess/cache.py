@@ -1,0 +1,61 @@
+"""Preprocessing disk cache: skip score-table construction on repeat runs.
+
+Keyed on everything the table depends on — a SHA-256 over the data bytes and
+the scoring hyperparameters (q, s, ess, gamma, prior matrix) — so a second
+`bn_learn` invocation with identical inputs restores the table instead of
+recomputing it. Storage rides checkpoint/checkpointer: atomic publish
+(write-to-temp + rename) means a killed run can never leave a
+readable-but-corrupt cache entry, and entries are plain .npy + manifest.
+
+Always caches the DENSE table: pruning (sparse.prune_table) is cheap and
+delta-dependent, so one cache entry serves every --prune-delta setting.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+
+import numpy as np
+
+from ..checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+__all__ = ["cache_key", "load_cached_table", "store_cached_table"]
+
+_FORMAT = "preprocess-v1"     # bump to invalidate every cached table
+
+
+def cache_key(data: np.ndarray, *, q: int, s: int, gamma: float, ess: float,
+              prior_matrix: np.ndarray | None = None) -> str:
+    """Hex digest identifying one preprocessing problem instance."""
+    h = hashlib.sha256()
+    h.update(_FORMAT.encode())
+    arr = np.ascontiguousarray(np.asarray(data, np.int32))
+    h.update(repr((arr.shape, q, s, float(gamma), float(ess))).encode())
+    h.update(arr.tobytes())
+    if prior_matrix is not None:
+        R = np.ascontiguousarray(np.asarray(prior_matrix, np.float32))
+        h.update(R.tobytes())
+    return h.hexdigest()[:24]
+
+
+def _entry_dir(cache_dir: str, key: str) -> str:
+    return os.path.join(cache_dir, key)
+
+
+def load_cached_table(cache_dir: str, key: str):
+    """(table, pst, psizes) numpy arrays, or None on miss."""
+    entry = _entry_dir(cache_dir, key)
+    if latest_step(entry) is None:
+        return None
+    tree_like = (np.zeros(0, np.float32), np.zeros(0, np.int32),
+                 np.zeros(0, np.int32))
+    (table, pst, psizes), _ = restore_checkpoint(entry, tree_like, step=0)
+    return np.asarray(table), np.asarray(pst), np.asarray(psizes)
+
+
+def store_cached_table(cache_dir: str, key: str, table, pst, psizes,
+                       metadata: dict | None = None) -> str:
+    tree = (np.asarray(table, np.float32), np.asarray(pst, np.int32),
+            np.asarray(psizes, np.int32))
+    return save_checkpoint(_entry_dir(cache_dir, key), 0, tree,
+                           metadata=metadata or {})

@@ -1,0 +1,207 @@
+"""Fused count+score for one column-subset chunk (paper §III-A on-device).
+
+The reference preprocessing (core/scores.build_score_table) materialises a
+(C, q^s, q) contingency tensor per (node, chunk) unit and re-builds the
+parent-config one-hot for every node. The fused formulation exploits two
+identities:
+
+* **Count once per column subset, against every child at once.** The
+  contingency counts for parent set pi of node i depend only on the *column
+  set* sigma = columns(pi, i) and the child column i. Counting sigma jointly
+  against the one-hot of ALL n columns — one (Q x m) @ (m x n*q) matmul —
+  amortises the (m, C, Q) one-hot build over all n children, an ~n-fold cut
+  in the memory traffic that dominates preprocessing.
+
+* **Scores depend on counts only through small integer marginals.** With a
+  uniform arity q, Eq. 4's gammaln terms take only (s+1) x (m+1) distinct
+  values: gammaln(N + alpha) for integer N in [0, m] and alpha determined by
+  |pi|. The ref path replaces gammaln evaluation with two precomputed lookup
+  tables (:func:`score_luts`), turning the transcendental bulk of scoring into
+  gathers; the Pallas kernel evaluates gammaln directly on the (Q, n*q) counts
+  block it just produced in VMEM — either way the (C, q^s, q) tensor never
+  reaches HBM, only the (C, n) fused output does.
+
+The per-subset output is ``TI[c, i] = sum_{k active} (term_k + term_jk)`` —
+everything of ls(i, pi) except the |pi|*ln(gamma) structure penalty, which the
+assembly (pipeline.py) adds per PST entry. The bin reduction is an explicitly
+SEQUENTIAL accumulation over the q^s bins so it reproduces the oracle's
+row-sum order: fused tables match `local_scores_chunk` bitwise on CPU (the
+property tests in tests/test_preprocess.py pin this to <= 1e-4 absolute).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+from jax.scipy.special import gammaln
+
+__all__ = ["score_luts", "fused_scores_ref", "fused_scores_pallas",
+           "encode_subset_codes"]
+
+
+def score_luts(q: int, s: int, m: int, ess: float):
+    """(lut_k, lut_j), each (s+1, m+1) f32: the two gammaln families of Eq. 4
+    tabulated over parent-set size k (rows) and integer count N (cols).
+
+    lut_k[k, N] = gammaln(a_k) - gammaln(a_k + N),   a_k  = ess / q^k
+    lut_j[k, N] = gammaln(N + a_jk) - gammaln(a_jk), a_jk = ess / (q^k * q)
+
+    Built with the same f32 ops as the oracle (jnp.power, jax gammaln) so the
+    tabulated values are bitwise the oracle's.
+    """
+    ks = jnp.arange(s + 1, dtype=jnp.float32)
+    r = jnp.power(float(q), ks)
+    a_k = (ess / r)[:, None]
+    a_jk = (ess / (r * q))[:, None]
+    counts = jnp.arange(m + 1, dtype=jnp.float32)[None, :]
+    lut_k = gammaln(a_k) - gammaln(a_k + counts)
+    lut_j = gammaln(counts + a_jk) - gammaln(a_jk)
+    return lut_k, lut_j
+
+
+def encode_subset_codes(data_ext: jnp.ndarray, sub_chunk: jnp.ndarray,
+                        q: int) -> jnp.ndarray:
+    """Mixed-radix configuration codes for a chunk of column subsets.
+
+    data_ext: (m, n+1) with an appended all-zeros column; sub_chunk: (C, s)
+    sorted column indices, -1 padded (padding maps to the zeros column, so
+    padded digit positions are the HIGH digits and contribute 0 — which is
+    what makes `code < q^{|subset|}` the exact active-bin test).
+    Returns (m, C) int32.
+    """
+    n = data_ext.shape[1] - 1
+    cols = jnp.where(sub_chunk < 0, n, sub_chunk)        # (C, s)
+    dcols = data_ext[:, cols]                            # (m, C, s)
+    pw = q ** jnp.arange(sub_chunk.shape[1], dtype=jnp.int32)
+    return jnp.sum(dcols * pw, axis=-1).astype(jnp.int32)
+
+
+def _sequential_bin_sum(masked: jnp.ndarray) -> jnp.ndarray:
+    """(C, Q, n) -> (C, n), accumulating the Q bins strictly in order — the
+    same association order as the oracle's (C, Q) row sum, which is what keeps
+    fused == reference at the ulp level."""
+    C, _, n = masked.shape
+
+    def step(acc, x):
+        return acc + x, None
+
+    acc, _ = jax.lax.scan(step, jnp.zeros((C, n), jnp.float32),
+                          jnp.moveaxis(masked, 1, 0))
+    return acc
+
+
+@functools.partial(jax.jit, static_argnames=("q", "s", "n"))
+def fused_scores_ref(data_ext: jnp.ndarray, child_oh: jnp.ndarray,
+                     sub_chunk: jnp.ndarray, ssz_chunk: jnp.ndarray,
+                     lut_k: jnp.ndarray, lut_j: jnp.ndarray, *,
+                     q: int, s: int, n: int) -> jnp.ndarray:
+    """Pure-jnp fused chunk: (C, n) TI for one chunk of column subsets.
+
+    child_oh: (m, n*q) one-hot of every column (built once per table).
+    Counts are produced by one MXU-shaped contraction, immediately consumed
+    by LUT gathers, and discarded — the only chunk output is (C, n).
+    """
+    C = sub_chunk.shape[0]
+    Q = q ** s
+    code = encode_subset_codes(data_ext, sub_chunk, q)               # (m, C)
+    oh = jax.nn.one_hot(code, Q, dtype=jnp.float32)                  # (m, C, Q)
+    counts = jnp.round(jnp.einsum("mcQ,mJ->cQJ", oh, child_oh)
+                       ).astype(jnp.int32)                           # (C, Q, n*q)
+    sz = ssz_chunk
+    Nk = counts[:, :, 0:q].sum(-1)                                   # (C, Q)
+    bins = jnp.arange(Q, dtype=jnp.float32)[None, :]
+    active = bins + 0.5 < jnp.power(float(q), sz.astype(jnp.float32))[:, None]
+    term_k = lut_k[sz[:, None], Nk]                                  # (C, Q)
+    term_j = lut_j[sz[:, None, None], counts]                        # (C, Q, n*q)
+    tj = term_j.reshape(C, Q, n, q).sum(-1)                          # (C, Q, n)
+    masked = active[:, :, None] * (tj + term_k[:, :, None])
+    return _sequential_bin_sum(masked)                               # (C, n)
+
+
+def _fused_kernel(sizes_ref, codes_ref, child_oh_ref, out_ref, counts_ref, *,
+                  Q: int, q: int, n: int, block_m: int, ess: float):
+    """Per (subset, m-block) program: accumulate the (Q, n*q) counts block in
+    VMEM, and on the last m-block collapse it straight to the (n,) fused
+    scores — the counts never leave VMEM (the fusion the paper leaves as
+    future work, §VII)."""
+    mb = pl.program_id(1)
+    nmb = pl.num_programs(1)
+
+    @pl.when(mb == 0)
+    def _init():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    codes = codes_ref[0, :]                              # (BM,) int32, -1 pad
+    valid = codes >= 0
+    bins = jax.lax.broadcasted_iota(jnp.int32, (block_m, Q), 1)
+    oh = (codes[:, None] == bins).astype(jnp.float32)    # pad rows all-zero
+    # mask padded samples out of the child one-hot too: correctness must not
+    # depend on the caller having zero-padded it (see kernels/count bugfix)
+    child = jnp.where(valid[:, None], child_oh_ref[...], 0.0)   # (BM, n*q)
+    counts_ref[...] += jax.lax.dot_general(
+        oh, child, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)              # (Q, n*q)
+
+    @pl.when(mb == nmb - 1)
+    def _score():
+        counts = counts_ref[...]
+        szf = sizes_ref[0, 0].astype(jnp.float32)
+        r = jnp.power(float(q), szf)
+        a_k = ess / r
+        a_jk = ess / (r * q)
+        Nk = jnp.sum(counts[:, 0:q], axis=-1)                        # (Q,)
+        term_k = gammaln(a_k) - gammaln(a_k + Nk)                    # (Q,)
+        gl = gammaln(counts + a_jk) - gammaln(a_jk)                  # (Q, n*q)
+        # per-child j-sum as an MXU matmul with a block-diagonal 0/1 matrix
+        # (avoids an in-kernel reshape, which Mosaic restricts)
+        col = jax.lax.broadcasted_iota(jnp.int32, (n * q, n), 0) // q
+        tgt = jax.lax.broadcasted_iota(jnp.int32, (n * q, n), 1)
+        sum_mat = (col == tgt).astype(jnp.float32)                   # (n*q, n)
+        tj = jax.lax.dot_general(gl, sum_mat, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (Q, n)
+        kbins = jax.lax.broadcasted_iota(jnp.float32, (Q,), 0)
+        active = (kbins + 0.5 < r).astype(jnp.float32)               # (Q,)
+        masked = active[:, None] * (tj + term_k[:, None])            # (Q, n)
+
+        def body(k, acc):
+            return acc + masked[k, :]
+
+        out_ref[0, :] = jax.lax.fori_loop(0, Q, body,
+                                          jnp.zeros((n,), jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("q", "s", "n", "ess", "block_m",
+                                             "interpret"))
+def fused_scores_pallas(codes: jnp.ndarray, child_oh: jnp.ndarray,
+                        ssz_chunk: jnp.ndarray, *, q: int, s: int, n: int,
+                        ess: float = 1.0, block_m: int = 512,
+                        interpret: bool | None = None) -> jnp.ndarray:
+    """Pallas fused count+score. codes: (C, m) int32 subset config codes with
+    -1 sample padding; child_oh: (m, n*q) one-hot of all columns (padded rows
+    are masked in-kernel); ssz_chunk: (C,) subset sizes. Returns (C, n) TI.
+    m must already be padded to a multiple of block_m."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    C, m = codes.shape
+    Q = q ** s
+    assert m % block_m == 0, "pad m to a multiple of block_m (codes with -1)"
+    grid = (C, m // block_m)
+    kernel = functools.partial(_fused_kernel, Q=Q, q=q, n=n,
+                               block_m=block_m, ess=ess)
+    sizes2d = ssz_chunk.astype(jnp.int32)[:, None]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda c, mb: (c, 0)),
+            pl.BlockSpec((1, block_m), lambda c, mb: (c, mb)),
+            pl.BlockSpec((block_m, n * q), lambda c, mb: (mb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n), lambda c, mb: (c, 0)),
+        out_shape=jax.ShapeDtypeStruct((C, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((Q, n * q), jnp.float32)],
+        interpret=interpret,
+    )(sizes2d, codes, child_oh)

@@ -1,0 +1,209 @@
+"""The fused preprocessing pipeline: cache -> plan -> fused count+score ->
+assemble -> (optional) prune.
+
+Replaces core/scores.build_score_table's host-side double loop (n nodes x
+S/chunk chunks, one device round-trip each) with:
+
+1. one fused count+score pass per column-subset chunk (fused.py) — all n
+   children of a chunk are scored by a single contraction, inside ONE jitted
+   scan per device (no per-chunk host sync);
+2. cost-balanced chunk sharding across devices (planner.py, paper §III-B);
+3. a gather assembly: ls(i, pi) = |pi|*ln(gamma) + TI[rank(columns(pi, i)), i]
+   using the vectorized combination ranking (core/combinatorics) — the rank
+   IS the hash (paper §III-A), so assembly is two indexed reads per entry;
+4. optional hash compression of the result (sparse.py, --prune-delta) and a
+   disk cache keyed on (data, q, s, ess, gamma, prior) (cache.py).
+
+The result is bitwise-compatible with build_score_table on CPU (the oracle's
+reduction order is reproduced deliberately; see fused.py) at a fraction of
+the wall clock — benchmarks/preprocess_bench.py measures >= 3x at n = 64 and
+~10x at ALARM size, which is what makes n > 60 end-to-end practical (the
+paper's headline scale).
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.combinatorics import build_pst, rank_combinations_batch
+from ..core.scores import ScoreTable, validate_prior_matrix
+from .cache import cache_key, load_cached_table, store_cached_table
+from .fused import (encode_subset_codes, fused_scores_pallas,
+                    fused_scores_ref, score_luts)
+from .planner import plan_preprocess
+from .sparse import SparseScoreTable, prune_table
+
+__all__ = ["build_score_table_fused", "assemble_table"]
+
+
+def _rank_map(n: int, s: int, pst: np.ndarray, psizes: np.ndarray) -> np.ndarray:
+    """(n, S) int32: rank_map[i, t] = rank (in the size-ascending subset
+    enumeration over the n columns) of the column set of PST row t for node i.
+    Candidate->column mapping is monotone, so digit order is preserved and
+    the subset's config bins line up with the PST entry's.
+
+    Built one node at a time: the batch ranking's int64 temporaries are
+    (S, s)-sized, so peak host memory stays ~S*s*8 bytes regardless of n
+    (an (n, S, s) broadcast would peak at ~12 GB for n=64, s=4)."""
+    out = np.empty((n, pst.shape[0]), np.int32)
+    for i in range(n):
+        cols = pst + (pst >= i)
+        cols = np.where(pst < 0, -1, cols)
+        out[i] = rank_combinations_batch(n, s, cols, psizes)
+    return out
+
+
+def assemble_table(TI: jnp.ndarray, rank_map: np.ndarray, psizes: np.ndarray,
+                   log_gamma: float) -> jnp.ndarray:
+    """(n, S) table from the fused per-subset output: a pure gather."""
+    n = TI.shape[1]
+    kfac = jnp.asarray(np.asarray(psizes, np.float32)) * jnp.float32(log_gamma)
+    rm = jnp.asarray(rank_map)
+    return kfac[None, :] + TI[rm, jnp.arange(n, dtype=jnp.int32)[:, None]]
+
+
+@functools.partial(jax.jit, static_argnames=("q", "s", "n", "ess",
+                                             "use_pallas", "block_m",
+                                             "interpret"))
+def _run_device(data_ext, subs, sszs, lut_k, lut_j, chunk_ids, *, q, s, n,
+                ess, use_pallas, block_m, interpret):
+    """One device's share: a single jitted scan over its chunk ids ->
+    stacked (U, C, n) TI. Module-level so the trace is compiled once per
+    problem shape, not once per build call."""
+    m = data_ext.shape[0]
+    child_oh = jax.nn.one_hot(data_ext[:, :n].reshape(-1), q,
+                              dtype=jnp.float32).reshape(m, n * q)
+    if use_pallas:
+        child_p = jnp.pad(child_oh, ((0, (-m) % block_m), (0, 0)))
+
+    def body(_, ci):
+        sub_c = subs[ci]
+        ssz_c = sszs[ci]
+        if use_pallas:
+            codes = encode_subset_codes(data_ext, sub_c, q).T       # (C, m)
+            codes = jnp.pad(codes, ((0, 0), (0, (-m) % block_m)),
+                            constant_values=-1)
+            ti = fused_scores_pallas(codes, child_p, ssz_c, q=q, s=s,
+                                     n=n, ess=ess, block_m=block_m,
+                                     interpret=interpret)
+        else:
+            ti = fused_scores_ref(data_ext, child_oh, sub_c, ssz_c,
+                                  lut_k, lut_j, q=q, s=s, n=n)
+        return None, ti
+
+    _, TI = jax.lax.scan(body, None, chunk_ids)
+    return TI
+
+
+def build_score_table_fused(data: np.ndarray, *, q: int, s: int,
+                            gamma: float = 0.1, ess: float = 1.0,
+                            chunk: int = 1024,
+                            prior_matrix: np.ndarray | None = None,
+                            prune_delta: float | None = None,
+                            cache_dir: str | None = None,
+                            mesh=None, devices=None,
+                            use_pallas: bool | None = None,
+                            block_m: int = 512,
+                            interpret: bool | None = None,
+                            return_info: bool = False):
+    """Drop-in replacement for core/scores.build_score_table (same table, same
+    PST ordering) via the fused pipeline. Returns a ScoreTable — or a
+    SparseScoreTable when ``prune_delta`` is set — and, with
+    ``return_info=True``, an info dict (cache_hit, plan imbalance, timings).
+
+    ``mesh``/``devices`` pick the accelerators to shard chunks over
+    (launch/mesh meshes work directly); default is the first local device.
+    ``use_pallas`` defaults to True on TPU, False elsewhere (the jnp fused
+    path is the fast CPU path; the kernel is the fast TPU path).
+    """
+    t0 = time.time()
+    data = np.asarray(data, dtype=np.int32)
+    m, n = data.shape
+    if np.any(data < 0) or np.any(data >= q):
+        raise ValueError(f"data states must lie in [0, {q})")
+    validate_prior_matrix(prior_matrix, n)
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+
+    info: dict = {"cache_hit": False, "n": n, "S": None}
+    pst, psizes = build_pst(n - 1, s)
+    S = pst.shape[0]
+    info["S"] = S
+    log_gamma = float(np.log(gamma))
+
+    key = None
+    if cache_dir:
+        key = cache_key(data, q=q, s=s, gamma=gamma, ess=ess,
+                        prior_matrix=prior_matrix)
+        cached = load_cached_table(cache_dir, key)
+        if cached is not None:
+            table_np, pst_c, psz_c = cached
+            info.update(cache_hit=True, preprocess_s=time.time() - t0)
+            st = ScoreTable(jnp.asarray(table_np), np.asarray(pst_c),
+                            np.asarray(psz_c), q, s)
+            if prune_delta is not None:
+                st = prune_table(st, prune_delta)
+            return (st, info) if return_info else st
+
+    # ---- plan: column subsets, chunked + cost-sharded (paper §III-B)
+    sub, ssz = build_pst(n, s)                   # subsets of ALL n columns
+    Csub = sub.shape[0]
+    chunk = min(chunk, Csub)
+    pad = (-Csub) % chunk
+    sub_p = np.pad(sub, ((0, pad), (0, 0)), constant_values=-1)
+    ssz_p = np.pad(ssz, (0, pad))
+    nch = sub_p.shape[0] // chunk
+    if devices is None:
+        devices = (list(np.asarray(mesh.devices).flat) if mesh is not None
+                   else [jax.devices()[0]])
+    plan = plan_preprocess(ssz_p, chunk, m, q, len(devices))
+    info["plan"] = {"n_chunks": plan.n_chunks, "n_devices": plan.n_devices,
+                    "imbalance": plan.imbalance}
+
+    # ---- execute: one jitted scan per device over its chunks
+    data_ext = np.concatenate([data, np.zeros((m, 1), np.int32)], axis=1)
+    subs3 = sub_p.reshape(nch, chunk, s)
+    sszs2 = ssz_p.reshape(nch, chunk)
+    lut_k, lut_j = score_luts(q, s, m, ess)
+    per_dev = []
+    for d, dev in enumerate(devices[:plan.n_devices]):
+        de = jax.device_put(jnp.asarray(data_ext), dev)
+        su = jax.device_put(jnp.asarray(subs3), dev)
+        sz = jax.device_put(jnp.asarray(sszs2), dev)
+        lk = jax.device_put(lut_k, dev)
+        lj = jax.device_put(lut_j, dev)
+        ids = jax.device_put(jnp.asarray(plan.padded_chunks[d]), dev)
+        out = _run_device(de, su, sz, lk, lj, ids, q=q, s=s, n=n, ess=ess,
+                          use_pallas=use_pallas, block_m=block_m,
+                          interpret=interpret)                # async dispatch
+        per_dev.append((plan.padded_chunks[d], out))
+
+    TI = np.zeros((nch * chunk, n), np.float32)
+    for ids, out in per_dev:
+        out = np.asarray(out)                              # (U, C, n) sync
+        for u, ci in enumerate(ids):                       # dupes: same data
+            TI[ci * chunk:(ci + 1) * chunk] = out[u]
+    TI = jnp.asarray(TI[:Csub])
+
+    # ---- assemble: rank-gather + structure penalty (+ prior)
+    rmap = _rank_map(n, s, pst, psizes)
+    table = assemble_table(TI, rmap, psizes, log_gamma)
+    if prior_matrix is not None:
+        from ..core.priors import prior_table
+        table = table + prior_table(jnp.asarray(prior_matrix, jnp.float32),
+                                    jnp.asarray(pst), n)
+    info["preprocess_s"] = time.time() - t0
+
+    if cache_dir:
+        store_cached_table(cache_dir, key, np.asarray(table), pst, psizes,
+                           metadata={"q": q, "s": s, "gamma": gamma,
+                                     "ess": ess, "m": m, "n": n})
+
+    st = ScoreTable(table, pst, psizes, q, s)
+    if prune_delta is not None:
+        st = prune_table(st, prune_delta)
+    return (st, info) if return_info else st

@@ -1,0 +1,99 @@
+"""Task-assignment planner (paper §III-B) for the preprocessing pipeline.
+
+The paper assigns score-computation work to GPU blocks by *estimated cost*,
+not by unit count: a parent set pi costs ~ q^{|pi|} * m (bins x samples).
+We shard at the granularity of column-subset chunks (fused.py) and balance
+chunks across devices with LPT (longest-processing-time-first) greedy
+scheduling — the classic 4/3-approximation to makespan, which is exactly the
+imbalance the paper's Fig. 6 task table addresses.
+
+The planner is pure (no device state): it maps a cost vector to per-device
+chunk lists, so it is unit-testable at any simulated device count and is
+reused by launch/bn_learn through pipeline.build_score_table_fused with the
+devices of a launch/mesh mesh.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = ["chunk_costs", "assign_chunks", "PreprocessPlan", "plan_preprocess"]
+
+
+def chunk_costs(sub_sizes: np.ndarray, chunk: int, m: int, q: int) -> np.ndarray:
+    """(n_chunks,) float64 estimated cost of each subset chunk:
+    sum over its rows of q^{size} * m (paper §III-B's per-set estimate).
+
+    This is the paper's cost model, an upper envelope on the active-bin
+    scoring work. The fused matmul itself is near-uniform per chunk (its
+    width is always q^s), so over uniform chunks LPT degrades gracefully
+    toward chunk-count balance — the model matters most for the padded tail
+    chunk and for mixed-size chunks at small S."""
+    sub_sizes = np.asarray(sub_sizes)
+    assert sub_sizes.shape[0] % chunk == 0, "pad subsets to a chunk multiple"
+    per_row = (float(q) ** sub_sizes.astype(np.float64)) * float(m)
+    return per_row.reshape(-1, chunk).sum(axis=1)
+
+
+def assign_chunks(costs: np.ndarray, n_devices: int) -> list[list[int]]:
+    """LPT assignment: chunks sorted by descending cost, each placed on the
+    currently least-loaded device. Returns per-device chunk-id lists (each
+    list ascending, for deterministic execution order)."""
+    costs = np.asarray(costs, dtype=np.float64)
+    loads = np.zeros(n_devices)
+    buckets: list[list[int]] = [[] for _ in range(n_devices)]
+    for c in np.argsort(-costs, kind="stable"):
+        d = int(np.argmin(loads))
+        buckets[d].append(int(c))
+        loads[d] += costs[c]
+    return [sorted(b) for b in buckets]
+
+
+@dataclass
+class PreprocessPlan:
+    """Sharding decision for one preprocessing run."""
+    chunk: int
+    n_chunks: int
+    costs: np.ndarray                       # (n_chunks,) estimated unit costs
+    device_chunks: list[list[int]]          # per-device ascending chunk ids
+    padded_chunks: list[np.ndarray] = field(default_factory=list)
+    # per-device ids padded (by repeating the last id) to a common length so
+    # every device runs the same static-shape scan; duplicate results are
+    # overwritten with identical values at assembly.
+
+    @property
+    def n_devices(self) -> int:
+        return len(self.device_chunks)
+
+    @property
+    def device_loads(self) -> np.ndarray:
+        return np.asarray([sum(self.costs[c] for c in b) if b else 0.0
+                           for b in self.device_chunks])
+
+    @property
+    def imbalance(self) -> float:
+        """max/mean device load (1.0 = perfectly balanced)."""
+        loads = self.device_loads
+        mean = loads.mean()
+        return float(loads.max() / mean) if mean > 0 else 1.0
+
+
+def plan_preprocess(sub_sizes: np.ndarray, chunk: int, m: int, q: int,
+                    n_devices: int) -> PreprocessPlan:
+    """Full plan: cost model + LPT + static-shape padding.
+
+    Every chunk id appears on exactly one device (before padding); padding
+    repeats each device's last id so all scans share one trace.
+    """
+    costs = chunk_costs(sub_sizes, chunk, m, q)
+    n_chunks = costs.shape[0]
+    device_chunks = assign_chunks(costs, max(1, n_devices))
+    # drop devices with no work (more devices than chunks); n_chunks >= 1
+    # always (the PST includes the empty set), so at least one bucket remains
+    device_chunks = [b for b in device_chunks if b]
+    width = max((len(b) for b in device_chunks), default=0)
+    padded = [np.asarray(b + [b[-1]] * (width - len(b)), dtype=np.int32)
+              for b in device_chunks]
+    return PreprocessPlan(chunk=chunk, n_chunks=n_chunks, costs=costs,
+                          device_chunks=device_chunks, padded_chunks=padded)

@@ -7,8 +7,25 @@ from _propcheck import given, hst, settings
 
 from repro.core.combinatorics import (build_pst, candidates_to_nodes,
                                       n_parent_sets, nodes_to_candidates,
-                                      rank_combination, rank_parent_set,
-                                      size_offsets, unrank_combination)
+                                      rank_combination,
+                                      rank_combinations_batch,
+                                      rank_parent_set, size_offsets,
+                                      unrank_combination)
+
+
+@pytest.mark.parametrize("n,s", [(6, 3), (9, 2), (12, 4)])
+def test_rank_combinations_batch_matches_scalar(n, s):
+    """Vectorized hockey-stick ranking == the scalar rank_parent_set, i.e.
+    the identity build_pst row t ranks back to t for every t."""
+    pst, sizes = build_pst(n, s)
+    got = rank_combinations_batch(n, s, pst, sizes)
+    np.testing.assert_array_equal(got, np.arange(pst.shape[0]))
+    # and on a shuffled batch with explicit scalar cross-check
+    rng = np.random.default_rng(0)
+    sel = rng.choice(pst.shape[0], size=min(50, pst.shape[0]), replace=False)
+    got = rank_combinations_batch(n, s, pst[sel], sizes[sel])
+    want = [rank_parent_set(n, s, row[row >= 0]) for row in pst[sel]]
+    np.testing.assert_array_equal(got, want)
 
 
 @pytest.mark.parametrize("n,k", [(5, 2), (7, 3), (8, 4), (6, 1), (4, 4)])

@@ -88,6 +88,77 @@ def test_count_sweep(q, s, m, C, block_m):
     np.testing.assert_allclose(np.asarray(got).sum(axis=(1, 2)), m, atol=1e-4)
 
 
+def test_count_pad_rows_masked_in_kernel():
+    """Regression (m not divisible by block_m): the kernel must mask padded
+    sample rows out of the child one-hot itself. A child one-hot built from a
+    0-padded child array has valid-looking rows in the pad region — before
+    the in-kernel mask, those rows corrupted the counts of parent-config 0."""
+    from repro.kernels.count.kernel import count_pallas
+
+    rng = np.random.default_rng(31)
+    q, s, m, C, block_m = 3, 2, 100, 6, 64          # pad = 28 rows
+    n = 5
+    D = rng.integers(0, q, (m, n)).astype(np.int32)
+    data_ext = jnp.asarray(np.concatenate([D, np.zeros((m, 1), np.int32)], 1))
+    pcols = jnp.asarray(rng.integers(0, n + 1, (C, s)).astype(np.int32))
+    child = data_ext[:, 1]
+    codes = encode_parent_configs(data_ext, pcols, q)
+    want = count_ref(codes, jax.nn.one_hot(child, q, dtype=jnp.float32),
+                     Q=q ** s)
+    pad = (-m) % block_m
+    codes_p = jnp.pad(codes, ((0, 0), (0, pad)), constant_values=-1)
+    # simulate one_hot(0-padded child): pad rows are one-hot of state 0
+    child_bad = jnp.concatenate(
+        [child, jnp.zeros((pad,), child.dtype)])
+    child_oh_bad = jax.nn.one_hot(child_bad, q, dtype=jnp.float32)
+    got = count_pallas(codes_p, child_oh_bad, Q=q ** s, block_m=block_m,
+                       interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got).sum(axis=(1, 2)), m, atol=1e-4)
+
+
+@given(hst.integers(0, 2**31 - 1))
+@settings(max_examples=8, deadline=None)
+def test_count_odd_m_property(seed):
+    """count_contingency at m coprime to block_m == pure-jnp oracle."""
+    rng = np.random.default_rng(seed)
+    q, s, C = 2, 3, 5
+    m = int(rng.integers(33, 200))
+    if m % 64 == 0:
+        m += 1
+    D = rng.integers(0, q, (m, 6)).astype(np.int32)
+    data_ext = jnp.asarray(np.concatenate([D, np.zeros((m, 1), np.int32)], 1))
+    pcols = jnp.asarray(rng.integers(0, 7, (C, s)).astype(np.int32))
+    child = data_ext[:, 3]
+    got = count_contingency(data_ext, child, pcols, q=q, s=s, block_m=64,
+                            interpret=True)
+    codes = encode_parent_configs(data_ext, pcols, q)
+    want = count_ref(codes, jax.nn.one_hot(child, q, dtype=jnp.float32),
+                     Q=q ** s)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_local_scores_chunk_use_pallas_path():
+    """Satellite: the count kernel wired into core/scores scoring — the
+    use_pallas flag must reproduce the einsum path."""
+    from repro.core.scores import local_scores_chunk
+    from repro.core.combinatorics import build_pst
+
+    rng = np.random.default_rng(37)
+    n, q, s, m = 6, 2, 3, 100                       # m % 512 != 0: pads
+    D = rng.integers(0, q, (m, n)).astype(np.int32)
+    data_ext = jnp.asarray(np.concatenate([D, np.zeros((m, 1), np.int32)], 1))
+    pst, psizes = build_pst(n - 1, s)
+    import math as _math
+    args = dict(q=q, s=s, log_gamma=float(_math.log(0.1)), ess=1.0)
+    want = local_scores_chunk(data_ext, jnp.int32(2), jnp.asarray(pst),
+                              jnp.asarray(psizes), **args)
+    got = local_scores_chunk(data_ext, jnp.int32(2), jnp.asarray(pst),
+                             jnp.asarray(psizes), use_pallas=True, **args)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-6)
+
+
 @given(hst.integers(0, 2**31 - 1))
 @settings(max_examples=10, deadline=None)
 def test_count_property_total_mass(seed):
