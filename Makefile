@@ -2,7 +2,8 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test bench-smoke bench-delta bench-preprocess bench-preprocess-smoke
+.PHONY: test bench-smoke bench-delta bench-mcmc bench-mcmc-smoke \
+        bench-preprocess bench-preprocess-smoke
 
 test:
 	$(PY) -m pytest -q
@@ -10,9 +11,16 @@ test:
 bench-smoke:
 	$(PY) benchmarks/delta_vs_full.py --smoke
 	$(PY) benchmarks/preprocess_bench.py --smoke
+	$(PY) benchmarks/mcmc_bench.py --smoke
 
 bench-delta:
 	$(PY) benchmarks/delta_vs_full.py
+
+bench-mcmc:
+	$(PY) benchmarks/mcmc_bench.py
+
+bench-mcmc-smoke:
+	$(PY) benchmarks/mcmc_bench.py --smoke
 
 bench-preprocess:
 	$(PY) benchmarks/preprocess_bench.py

@@ -83,11 +83,21 @@ def latest_step(directory: str) -> int | None:
 
 
 def restore_checkpoint(directory: str, tree_like: Any, step: int | None = None,
-                       shardings: Any = None) -> tuple[Any, dict]:
-    """Restore into the structure of `tree_like` (values ignored). If
-    `shardings` is given (pytree of NamedSharding), leaves are placed sharded —
-    this is the elastic path: any mesh works, the checkpoint is topology-free.
-    Returns (tree, metadata)."""
+                       shardings: Any = None,
+                       allow_missing: bool = False) -> tuple[Any, dict]:
+    """Restore into the structure of `tree_like` (values ignored unless
+    `allow_missing` backfills them). If `shardings` is given (pytree of
+    NamedSharding), leaves are placed sharded — this is the elastic path: any
+    mesh works, the checkpoint is topology-free. Returns (tree, metadata).
+
+    allow_missing=True is the schema-evolution path: leaves of `tree_like`
+    with no counterpart in the manifest KEEP the caller's value (callers pass
+    freshly-initialised state, so new trailing fields — e.g. the bitmask /
+    adaptive-window ChainState leaves added after the 9-field layout — are
+    backfilled instead of failing the name check). Leaves present in the
+    manifest but absent from `tree_like` still raise: silently DROPPING saved
+    state is never safe. The names of backfilled leaves are reported under
+    metadata["missing_leaves"]."""
     if step is None:
         step = latest_step(directory)
         if step is None:
@@ -95,20 +105,28 @@ def restore_checkpoint(directory: str, tree_like: Any, step: int | None = None,
     path = os.path.join(directory, f"step_{step:010d}")
     with open(os.path.join(path, _MANIFEST)) as f:
         manifest = json.load(f)
-    names, _, treedef = _flatten_with_paths(tree_like)
-    if names != manifest["names"]:
+    names, cur_leaves, treedef = _flatten_with_paths(tree_like)
+    missing = [n for n in names if n not in manifest["names"]]
+    if (set(manifest["names"]) - set(names)) or (missing and not allow_missing):
         raise ValueError("checkpoint structure mismatch: "
                          f"{set(manifest['names']) ^ set(names)}")
+    dtypes = dict(zip(manifest["names"], manifest["dtypes"]))
     sh_leaves = (jax.tree.leaves(shardings) if shardings is not None
                  else [None] * len(names))
     leaves = []
-    for name, dt, sh in zip(names, manifest["dtypes"], sh_leaves):
-        arr = np.load(os.path.join(path, name + ".npy"))
-        val = jax.numpy.asarray(arr, dtype=dt)
+    for name, cur, sh in zip(names, cur_leaves, sh_leaves):
+        if name in dtypes:
+            arr = np.load(os.path.join(path, name + ".npy"))
+            val = jax.numpy.asarray(arr, dtype=dtypes[name])
+        else:
+            val = cur                      # backfilled from the caller's init
         if sh is not None:
             val = jax.device_put(val, sh)
         leaves.append(val)
-    return treedef.unflatten(leaves), manifest["metadata"]
+    metadata = dict(manifest["metadata"])
+    if missing:
+        metadata["missing_leaves"] = missing
+    return treedef.unflatten(leaves), metadata
 
 
 class AsyncCheckpointer:

@@ -6,13 +6,18 @@ table (Eq. 4), pairwise priors (Eq. 10), and parent-set-table task decomposition
 """
 from .combinatorics import (build_pst, n_parent_sets, rank_combination,
                             rank_combinations_batch, rank_parent_set,
-                            unrank_combination)
-from .graph import adjacency_from_best, random_cpts, random_dag, topological_order
-from .mcmc import (ChainState, exchange_best, init_chain, mcmc_run,
-                   mcmc_run_chains, mcmc_step, propose_move)
+                            unrank_combination, unrank_parent_set)
+from .graph import (adjacency_from_best, adjacency_from_ranks, random_cpts,
+                    random_dag, topological_order)
+from .mcmc import (BitmaskDelta, ChainState, exchange_best, exchange_step,
+                   init_chain, mcmc_run, mcmc_run_adaptive, mcmc_run_chains,
+                   mcmc_run_chains_adaptive, mcmc_step, mcmc_step_adaptive,
+                   propose_move)
 from .metrics import roc_point, structural_hamming
-from .order_scoring import (NEG_INF, delta_window, score_order_chunked,
-                            score_order_delta, score_order_pruned,
+from .order_scoring import (NEG_INF, build_membership_planes,
+                            build_violation_planes, delta_window,
+                            score_order_chunked, score_order_delta,
+                            score_order_delta_bitmask, score_order_pruned,
                             score_order_pruned_delta, score_order_ref)
 from .priors import make_prior_matrix, ppf, ppf_ln, prior_table
 from .scores import (ScoreTable, build_score_table, score_single,
@@ -20,12 +25,17 @@ from .scores import (ScoreTable, build_score_table, score_single,
 
 __all__ = [
     "build_pst", "n_parent_sets", "rank_combination",
-    "rank_combinations_batch", "rank_parent_set",
-    "unrank_combination", "adjacency_from_best", "random_cpts", "random_dag",
-    "topological_order", "ChainState", "exchange_best", "init_chain", "mcmc_run",
-    "mcmc_run_chains", "mcmc_step", "propose_move", "roc_point",
-    "structural_hamming", "NEG_INF", "delta_window", "score_order_chunked",
-    "score_order_delta", "score_order_pruned", "score_order_pruned_delta",
+    "rank_combinations_batch", "rank_parent_set", "unrank_combination",
+    "unrank_parent_set", "adjacency_from_best", "adjacency_from_ranks",
+    "random_cpts", "random_dag",
+    "topological_order", "BitmaskDelta", "ChainState", "exchange_best",
+    "exchange_step", "init_chain", "mcmc_run", "mcmc_run_adaptive",
+    "mcmc_run_chains", "mcmc_run_chains_adaptive", "mcmc_step",
+    "mcmc_step_adaptive", "propose_move",
+    "roc_point", "structural_hamming", "NEG_INF", "build_membership_planes",
+    "build_violation_planes", "delta_window", "score_order_chunked",
+    "score_order_delta", "score_order_delta_bitmask", "score_order_pruned",
+    "score_order_pruned_delta",
     "score_order_ref", "make_prior_matrix", "ppf",
     "ppf_ln", "prior_table", "ScoreTable", "build_score_table", "score_single",
     "validate_prior_matrix",

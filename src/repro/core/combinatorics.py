@@ -35,6 +35,7 @@ __all__ = [
     "rank_combinations_batch",
     "build_pst",
     "rank_parent_set",
+    "unrank_parent_set",
     "candidates_to_nodes",
     "nodes_to_candidates",
 ]
@@ -182,6 +183,21 @@ def rank_parent_set(n_candidates: int, s: int, parents: np.ndarray) -> int:
         raise ValueError(f"parent set of size {k} exceeds limit s={s}")
     off = size_offsets(n_candidates, s)
     return int(off[k] + (rank_combination(n_candidates, parents) if k else 0))
+
+
+def unrank_parent_set(n_candidates: int, s: int, rank: int) -> np.ndarray:
+    """Inverse of :func:`rank_parent_set`: global PST rank -> sorted candidate
+    indices. Locates the size-k block from :func:`size_offsets`, then applies
+    paper Algorithm 2 within it — O(s·n) integer math, NO materialized PST.
+    This is what lets the pruned representation drop the (S, s) table
+    entirely (adjacency recovery decodes the ≤ n winning ranks on the fly)."""
+    off = size_offsets(n_candidates, s)
+    if not (0 <= rank < off[-1]):
+        raise ValueError(f"rank {rank} outside [0, S={off[-1]})")
+    k = int(np.searchsorted(off, rank, side="right")) - 1
+    if k == 0:
+        return np.empty(0, dtype=np.int64)
+    return unrank_combination(n_candidates, k, int(rank) - int(off[k]))
 
 
 def candidates_to_nodes(cands: np.ndarray, node: int) -> np.ndarray:

@@ -3,10 +3,11 @@ from __future__ import annotations
 
 import numpy as np
 
-from .combinatorics import candidates_to_nodes
+from .combinatorics import candidates_to_nodes, unrank_parent_set
 
 __all__ = ["random_dag", "random_cpts", "adjacency_from_best",
-           "parents_list_from_adjacency", "topological_order"]
+           "adjacency_from_ranks", "parents_list_from_adjacency",
+           "topological_order"]
 
 
 def random_dag(rng: np.random.Generator, n: int, max_parents: int,
@@ -66,5 +67,19 @@ def adjacency_from_best(best_idx: np.ndarray, pst: np.ndarray) -> np.ndarray:
     for i in range(n):
         cands = pst[int(best_idx[i])]
         for m in candidates_to_nodes(cands[cands >= 0], i):
+            adj[int(m), i] = 1
+    return adj
+
+
+def adjacency_from_ranks(best_idx: np.ndarray, *, s: int) -> np.ndarray:
+    """adjacency_from_best WITHOUT the (S, s) PST: each winning rank is
+    unranked arithmetically (paper Algorithm 2). Identical output — the PST
+    is built size-ascending/lexicographic, i.e. exactly in rank order — but
+    usable from the pruned representation, whose footprint stays O(n·K)."""
+    n = len(best_idx)
+    adj = np.zeros((n, n), dtype=np.int8)
+    for i in range(n):
+        cands = unrank_parent_set(n - 1, s, int(best_idx[i]))
+        for m in candidates_to_nodes(cands, i):
             adj[int(m), i] = 1
     return adj

@@ -28,6 +28,36 @@ Two proposal regimes:
 
 Everything is a `lax.scan` over iterations; chains are vmapped (and sharded
 over the `data`/`pod` mesh axes by launch/bn_learn.py).
+
+Cached consistency bitmasks (ChainState.mask_planes)
+----------------------------------------------------
+
+The bitmask-cached delta path (core/order_scoring §Cached consistency
+bitmasks) carries its per-node packed violation-count planes in
+``ChainState.mask_planes``: shape (n, P, S/32) uint32, where P =
+ceil(log2(s+1)) bit planes count, per (node, parent-set), the parents that
+do NOT precede the node — bit b of word j refers to PST rank 32j+b
+(LSB-first), and a set is consistent iff its count is zero across all
+planes. The planes are built once at :func:`init_chain` (``planes_fn``),
+patched for the ≤ window moved nodes per proposal, and adopted on accept —
+exactly mirroring the (cur_ls, cur_idx) cache discipline, so the invariant
+"mask_planes describes the CURRENT order" holds at every iteration. Paths
+that don't use the cache carry a zero-size placeholder.
+
+Adaptive move windows (freeze after burn-in)
+--------------------------------------------
+
+:func:`mcmc_step_adaptive` tunes the move window from the running accept
+rate: a SMALL STATIC set of candidate windows is pre-traced (one
+`lax.switch` branch per window, each with its own delta closure, so the
+delta ≡ full bitwise guarantee holds per window), and a dual-averaging
+iterate in index space (Nesterov 2009, the same scheme NUTS uses for step
+size) nudges the selected index toward ``target_accept``: too-high accept
+rate ⇒ wider window (bigger moves), too-low ⇒ narrower. The selection is
+FROZEN once ``step ≥ burn_in``: a kernel whose parameters keep adapting
+forever is not a valid Markov chain (diminishing-adaptation conditions are
+easy to violate), whereas adapt-then-freeze makes every post-burn-in sample
+come from one fixed Metropolis kernel — the standard warm-up contract.
 """
 from __future__ import annotations
 
@@ -39,8 +69,11 @@ import jax.numpy as jnp
 
 from .order_scoring import inverse_permutation
 
-__all__ = ["ChainState", "init_chain", "mcmc_run", "mcmc_run_chains",
-           "mcmc_step", "propose_move", "exchange_best"]
+__all__ = ["ChainState", "BitmaskDelta", "init_chain", "mcmc_run",
+           "mcmc_run_adaptive", "mcmc_run_chains",
+           "mcmc_run_chains_adaptive", "mcmc_step", "mcmc_step_adaptive",
+           "propose_move", "exchange_best", "exchange_step",
+           "DEFAULT_TARGET_ACCEPT"]
 
 ScoreFn = Callable[[jnp.ndarray], tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]]
 # pos (n,) -> (score, best_idx (n,), best_ls (n,))
@@ -55,6 +88,21 @@ DeltaFn = Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray],
 # tracking and adjacency recovery are identical. launch/bn_learn.make_score_fn
 # and make_delta_fn do the dispatch.
 
+DEFAULT_TARGET_ACCEPT = 0.234   # classic random-walk Metropolis optimum
+
+
+class BitmaskDelta(NamedTuple):
+    """Marker wrapper for the EXTENDED delta contract — the bitmask-cached
+    path needs the previous order and the cached planes, and hands back the
+    patched planes for the sampler to adopt on accept:
+
+        fn(new_pos, lo, prev_ls, prev_idx, old_pos, planes)
+            -> (score, best_idx, best_ls, new_planes)
+
+    Wrapping (instead of widening DeltaFn) keeps every existing plain delta
+    closure — pruned, sharded, kernel — working unchanged."""
+    fn: Callable
+
 
 class ChainState(NamedTuple):
     key: jax.Array
@@ -68,13 +116,29 @@ class ChainState(NamedTuple):
     # appended LAST so positionally-named checkpoint leaves of the previous
     # 8-field layout stay aligned on restore
     cur_ls: jax.Array       # (n,) f32 — per-node best local scores (delta cache)
+    # --- appended by the bitmask/adaptive engine (ISSUE 3); restore of a
+    # pre-tentpole checkpoint backfills these (checkpointer allow_missing)
+    mask_planes: jax.Array  # (n, P, S/32) uint32 violation planes, or (0,)
+    win_idx: jax.Array      # int32 — index into the static adaptive window set
+    adapt_err: jax.Array    # f32 — dual-averaging Σ(accept − target)
+    step: jax.Array         # int32 — iteration counter (burn-in freeze)
 
 
-def init_chain(key: jax.Array, n: int, score_fn: ScoreFn) -> ChainState:
+def _no_planes() -> jax.Array:
+    """Zero-size placeholder for paths without the bitmask cache."""
+    return jnp.zeros((0,), jnp.uint32)
+
+
+def init_chain(key: jax.Array, n: int, score_fn: ScoreFn,
+               planes_fn: Callable[[jnp.ndarray], jax.Array] | None = None,
+               win_idx: int = 0) -> ChainState:
     key, sub = jax.random.split(key)
     pos = jax.random.permutation(sub, n).astype(jnp.int32)
     score, idx, ls = score_fn(pos)
-    return ChainState(key, pos, score, idx, score, idx, pos, jnp.int32(0), ls)
+    planes = planes_fn(pos) if planes_fn is not None else _no_planes()
+    return ChainState(key, pos, score, idx, score, idx, pos, jnp.int32(0), ls,
+                      planes, jnp.int32(win_idx), jnp.float32(0.0),
+                      jnp.int32(0))
 
 
 def _propose_swap(key: jax.Array, pos: jax.Array) -> jax.Array:
@@ -90,13 +154,19 @@ def _propose_swap(key: jax.Array, pos: jax.Array) -> jax.Array:
 
 def propose_move(key: jax.Array, pos: jax.Array, *, window: int):
     """Bounded-window move mixture. Returns (new_pos, lo) where every changed
-    position lies in [lo, lo+window-1]. Requires window ≥ 2 (and n ≥ 2).
+    position lies in [lo, lo+window-1]. Requires window ≥ 2 (and n ≥ 2);
+    window > n is clamped to n (callers that should refuse instead — the CLI
+    — validate before tracing, launch/bn_learn.main).
 
     Symmetry: each move's reverse is generated with the same probability
     (swap/reversal pick unordered windows; insertion draws (a, ±d) and the
     inverse is (b, ∓d), equiprobable), so Metropolis acceptance needs no
     Hastings correction.
     """
+    if window < 2:
+        raise ValueError(
+            f"propose_move needs window >= 2, got {window}: window=1 has no "
+            "in-window move (use window=0 for the legacy unbounded swap)")
     n = pos.shape[0]
     w = min(window, n)
     k_mv, k1, k2, k3 = jax.random.split(key, 4)
@@ -132,24 +202,33 @@ def propose_move(key: jax.Array, pos: jax.Array, *, window: int):
     return new_pos, lo.astype(jnp.int32)
 
 
-def mcmc_step(state: ChainState, score_fn: ScoreFn,
-              delta_fn: DeltaFn | None = None,
-              window: int = 0) -> ChainState:
-    """One MH iteration. window ≥ 2 selects the bounded-window move mixture;
-    delta_fn (requires window ≥ 2) selects the incremental O(window·S)
-    rescore seeded from the chain's (cur_ls, cur_idx) cache."""
-    assert delta_fn is None or window >= 2, \
-        "the delta path needs bounded-window proposals (window >= 2)"
-    key, k_prop, k_u = jax.random.split(state.key, 3)
+def _propose_and_score(state: ChainState, k_prop: jax.Array,
+                       score_fn: ScoreFn,
+                       delta_fn: DeltaFn | BitmaskDelta | None, window: int):
+    """One proposal + rescore under a STATIC window, dispatching between the
+    full, plain-delta and bitmask-delta paths. Returns
+    (new_pos, new_score, new_idx, new_ls, new_planes)."""
     if window >= 2:
         new_pos, lo = propose_move(k_prop, state.pos, window=window)
     else:
         new_pos, lo = _propose_swap(k_prop, state.pos), jnp.int32(0)
-    if delta_fn is not None:
+    if isinstance(delta_fn, BitmaskDelta):
+        new_score, new_idx, new_ls, new_planes = delta_fn.fn(
+            new_pos, lo, state.cur_ls, state.cur_idx, state.pos,
+            state.mask_planes)
+    elif delta_fn is not None:
         new_score, new_idx, new_ls = delta_fn(new_pos, lo, state.cur_ls,
                                               state.cur_idx)
+        new_planes = state.mask_planes
     else:
         new_score, new_idx, new_ls = score_fn(new_pos)
+        new_planes = state.mask_planes
+    return new_pos, new_score, new_idx, new_ls, new_planes
+
+
+def _accept_update(state: ChainState, key, k_u, proposal) -> ChainState:
+    """Shared MH accept/reject + cache/best bookkeeping."""
+    new_pos, new_score, new_idx, new_ls, new_planes = proposal
     log_u = jnp.log(jax.random.uniform(k_u, (), minval=1e-38))
     accept = log_u < (new_score - state.score)
 
@@ -157,24 +236,90 @@ def mcmc_step(state: ChainState, score_fn: ScoreFn,
     score = jnp.where(accept, new_score, state.score)
     cur_idx = jnp.where(accept, new_idx, state.cur_idx)
     cur_ls = jnp.where(accept, new_ls, state.cur_ls)
+    mask_planes = jnp.where(accept, new_planes, state.mask_planes)
 
     better = accept & (new_score > state.best_score)
-    return ChainState(
+    return accept, ChainState(
         key=key, pos=pos, score=score, cur_idx=cur_idx, cur_ls=cur_ls,
+        mask_planes=mask_planes,
         best_score=jnp.where(better, new_score, state.best_score),
         best_idx=jnp.where(better, new_idx, state.best_idx),
         best_pos=jnp.where(better, new_pos, state.best_pos),
         accepts=state.accepts + accept.astype(jnp.int32),
+        win_idx=state.win_idx, adapt_err=state.adapt_err,
+        step=state.step + 1,
     )
 
 
+def mcmc_step(state: ChainState, score_fn: ScoreFn,
+              delta_fn: DeltaFn | BitmaskDelta | None = None,
+              window: int = 0) -> ChainState:
+    """One MH iteration. window ≥ 2 selects the bounded-window move mixture;
+    delta_fn (requires window ≥ 2) selects the incremental O(window·S)
+    rescore seeded from the chain's (cur_ls, cur_idx) cache — wrapped in
+    :class:`BitmaskDelta`, additionally from its cached consistency planes."""
+    assert delta_fn is None or window >= 2, \
+        "the delta path needs bounded-window proposals (window >= 2)"
+    key, k_prop, k_u = jax.random.split(state.key, 3)
+    proposal = _propose_and_score(state, k_prop, score_fn, delta_fn, window)
+    _, new_state = _accept_update(state, key, k_u, proposal)
+    return new_state
+
+
+def mcmc_step_adaptive(state: ChainState, score_fn: ScoreFn,
+                       delta_fns: tuple, windows: tuple[int, ...], *,
+                       target_accept: float = DEFAULT_TARGET_ACCEPT,
+                       burn_in: int = 0, da_gamma: float = 0.15,
+                       da_t0: int = 10) -> ChainState:
+    """One MH iteration with adaptive window selection (module docstring).
+
+    windows: static, sorted candidate windows (each ≥ 2); delta_fns: matching
+    tuple of DeltaFn/BitmaskDelta/None closures. state.win_idx picks the
+    pre-traced `lax.switch` branch; while step < burn_in a dual-averaging
+    iterate in index space moves win_idx toward target_accept, after that it
+    is frozen (MCMC validity — adapt-then-freeze)."""
+    assert len(windows) == len(delta_fns) and len(windows) >= 1
+    key, k_prop, k_u = jax.random.split(state.key, 3)
+
+    def branch(j):
+        def go(_):
+            return _propose_and_score(state, k_prop, score_fn, delta_fns[j],
+                                      windows[j])
+        return go
+
+    idx = jnp.clip(state.win_idx, 0, len(windows) - 1)
+    proposal = jax.lax.switch(idx, [branch(j) for j in range(len(windows))],
+                              None)
+    accept, new_state = _accept_update(state, key, k_u, proposal)
+
+    # dual averaging in window-INDEX space: accept above target ⇒ push the
+    # iterate up (wider moves), below ⇒ down; frozen once step ≥ burn_in
+    t = new_state.step.astype(jnp.float32)            # 1-based after update
+    adapting = new_state.step <= jnp.int32(burn_in)
+    err = jnp.where(adapting,
+                    state.adapt_err + (accept.astype(jnp.float32)
+                                       - jnp.float32(target_accept)),
+                    state.adapt_err)
+    mu = jnp.float32((len(windows) - 1) / 2.0)
+    x = mu + jnp.sqrt(t) / (jnp.float32(da_gamma) * (t + jnp.float32(da_t0))) \
+        * err
+    prop_idx = jnp.clip(jnp.round(x).astype(jnp.int32), 0, len(windows) - 1)
+    win_idx = jnp.where(new_state.step < jnp.int32(burn_in), prop_idx,
+                        state.win_idx)
+    return new_state._replace(win_idx=win_idx, adapt_err=err)
+
+
 @functools.partial(jax.jit, static_argnames=("n", "score_fn", "iters", "trace",
-                                             "delta_fn", "window"))
+                                             "delta_fn", "window",
+                                             "planes_fn"))
 def mcmc_run(key: jax.Array, n: int, score_fn: ScoreFn, iters: int,
-             trace: bool = False, delta_fn: DeltaFn | None = None,
-             window: int = 0):
-    """Run one chain for `iters` iterations. Returns (final_state, score_trace)."""
-    state = init_chain(key, n, score_fn)
+             trace: bool = False,
+             delta_fn: DeltaFn | BitmaskDelta | None = None,
+             window: int = 0, planes_fn=None):
+    """Run one chain for `iters` iterations. Returns (final_state, score_trace).
+    planes_fn (pos -> violation planes) is required iff delta_fn is a
+    BitmaskDelta — it seeds the chain's consistency-mask cache."""
+    state = init_chain(key, n, score_fn, planes_fn=planes_fn)
 
     def body(st, _):
         st = mcmc_step(st, score_fn, delta_fn, window)
@@ -184,15 +329,126 @@ def mcmc_run(key: jax.Array, n: int, score_fn: ScoreFn, iters: int,
     return state, tr
 
 
+@functools.partial(jax.jit, static_argnames=("n", "score_fn", "iters",
+                                             "windows", "delta_fns",
+                                             "planes_fn", "burn_in",
+                                             "target_accept", "trace"))
+def mcmc_run_adaptive(key: jax.Array, n: int, score_fn: ScoreFn, iters: int, *,
+                      windows: tuple[int, ...], delta_fns: tuple = None,
+                      planes_fn=None, burn_in: int = None,
+                      target_accept: float = DEFAULT_TARGET_ACCEPT,
+                      trace: bool = False):
+    """Run one chain with adaptive window selection. burn_in defaults to
+    iters // 5; after it the window is frozen. Returns (final_state, trace)
+    where trace (if requested) is (score (iters,), win_idx (iters,))."""
+    if delta_fns is None:
+        delta_fns = (None,) * len(windows)
+    if burn_in is None:
+        burn_in = iters // 5
+    state = init_chain(key, n, score_fn, planes_fn=planes_fn,
+                       win_idx=len(windows) // 2)
+
+    def body(st, _):
+        st = mcmc_step_adaptive(st, score_fn, delta_fns, windows,
+                                target_accept=target_accept, burn_in=burn_in)
+        return st, ((st.score, st.win_idx) if trace else None)
+
+    state, tr = jax.lax.scan(body, state, None, length=iters)
+    return state, tr
+
+
+def exchange_step(states: ChainState) -> ChainState:
+    """In-scan cross-chain exchange: the best chain (argmax best_score)
+    re-seeds the worst chain's position/cache state — current pos, score,
+    (cur_ls, cur_idx) and mask_planes are copied TOGETHER, so the re-seeded
+    chain's caches describe its new order by construction, and its best_*
+    triple is replaced by the donor's (≥ its own by argmin choice, keeping
+    per-chain best_score monotone). PRNG keys, accept counts and adaptive
+    stats stay per-slot, so the clone diverges immediately — the same
+    re-seeding discipline as runtime/straggler.rebalance_chains, applied
+    inside the scan instead of at the end."""
+    b = jnp.argmax(states.best_score)
+    w = jnp.argmin(states.best_score)
+
+    def mv(leaf):
+        return leaf.at[w].set(leaf[b])
+
+    return states._replace(
+        pos=mv(states.pos), score=mv(states.score),
+        cur_idx=mv(states.cur_idx), cur_ls=mv(states.cur_ls),
+        mask_planes=mv(states.mask_planes), best_score=mv(states.best_score),
+        best_idx=mv(states.best_idx), best_pos=mv(states.best_pos))
+
+
+def _run_chain_rounds(states, step, iters: int, exchange_every: int,
+                      n_chains: int):
+    """Shared chain-scan skeleton: vmapped `step` for `iters` iterations,
+    with the in-scan exchange spliced in every `exchange_every` (plus a
+    trailing partial round)."""
+    def sweep(states, length):
+        def body(st, _):
+            return jax.vmap(step)(st), None
+        states, _ = jax.lax.scan(body, states, None, length=length)
+        return states
+
+    if exchange_every <= 0 or n_chains < 2:
+        return sweep(states, iters)
+    rounds, rem = divmod(iters, exchange_every)
+
+    def round_body(st, _):
+        return exchange_step(sweep(st, exchange_every)), None
+
+    states, _ = jax.lax.scan(round_body, states, None, length=rounds)
+    return sweep(states, rem)
+
+
+@functools.partial(jax.jit, static_argnames=("n_chains", "n", "score_fn",
+                                             "iters", "delta_fn", "window",
+                                             "exchange_every", "planes_fn"))
 def mcmc_run_chains(key: jax.Array, n_chains: int, n: int, score_fn: ScoreFn,
-                    iters: int, delta_fn: DeltaFn | None = None,
-                    window: int = 0):
-    """vmapped independent chains (DP axis). Returns stacked final states."""
+                    iters: int, delta_fn: DeltaFn | BitmaskDelta | None = None,
+                    window: int = 0, exchange_every: int = 0, planes_fn=None):
+    """vmapped independent chains (DP axis). Returns stacked final states.
+
+    exchange_every > 0 runs the periodic in-scan :func:`exchange_step` every
+    that many iterations (plus a trailing partial round), instead of only
+    reducing at the end: slow chains inherit the current best basin while
+    the walk is still running — the paper's end-only best-graph exchange
+    promoted to a restart heuristic. 0 keeps fully independent chains."""
     keys = jax.random.split(key, n_chains)
-    run = functools.partial(mcmc_run, n=n, score_fn=score_fn, iters=iters,
-                            delta_fn=delta_fn, window=window)
-    states, _ = jax.vmap(lambda k: run(k))(keys)
-    return states
+    states = jax.vmap(
+        lambda k: init_chain(k, n, score_fn, planes_fn=planes_fn))(keys)
+    return _run_chain_rounds(
+        states, lambda s: mcmc_step(s, score_fn, delta_fn, window), iters,
+        exchange_every, n_chains)
+
+
+@functools.partial(jax.jit, static_argnames=("n_chains", "n", "score_fn",
+                                             "iters", "windows", "delta_fns",
+                                             "planes_fn", "burn_in",
+                                             "target_accept",
+                                             "exchange_every"))
+def mcmc_run_chains_adaptive(key: jax.Array, n_chains: int, n: int,
+                             score_fn: ScoreFn, iters: int, *,
+                             windows: tuple[int, ...], delta_fns: tuple = None,
+                             planes_fn=None, burn_in: int = None,
+                             target_accept: float = DEFAULT_TARGET_ACCEPT,
+                             exchange_every: int = 0):
+    """mcmc_run_chains with per-chain adaptive window selection: each chain
+    runs its own dual-averaging warm-up (adaptive stats are deliberately NOT
+    copied by exchange_step, so a re-seeded chain keeps its own tuning)."""
+    if delta_fns is None:
+        delta_fns = (None,) * len(windows)
+    if burn_in is None:
+        burn_in = iters // 5
+    keys = jax.random.split(key, n_chains)
+    states = jax.vmap(
+        lambda k: init_chain(k, n, score_fn, planes_fn=planes_fn,
+                             win_idx=len(windows) // 2))(keys)
+    step = lambda s: mcmc_step_adaptive(s, score_fn, delta_fns, windows,
+                                        target_accept=target_accept,
+                                        burn_in=burn_in)
+    return _run_chain_rounds(states, step, iters, exchange_every, n_chains)
 
 
 def exchange_best(states: ChainState) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:

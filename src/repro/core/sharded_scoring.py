@@ -114,6 +114,12 @@ def sharded_chain_step(states, table, pst, mesh, *, axis: str = "model",
     window ≥ 2 (and ≤ DELTA_CROSSOVER·n, else it degrades to the full path)
     enables bounded-window proposals + incremental O(window·S/tp) rescoring
     per device.
+
+    The bitmask/adaptive ChainState leaves added by ISSUE 3 ride the same
+    per-chain P(data-axes) specs as every other leaf (mask_planes is the
+    zero-size placeholder here: the sharded delta path recomputes its window
+    masks per shard — S-sharding the cached planes over `axis` is the
+    natural next step, ROADMAP §perf).
     """
     from jax.experimental.shard_map import shard_map
 

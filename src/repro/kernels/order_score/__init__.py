@@ -1,5 +1,6 @@
-from .ops import order_score, order_score_delta, pad_for_kernel
+from .ops import (order_score, order_score_delta, order_score_delta_bitmask,
+                  pad_for_kernel)
 from .ref import order_score_ref
 
-__all__ = ["order_score", "order_score_delta", "pad_for_kernel",
-           "order_score_ref"]
+__all__ = ["order_score", "order_score_delta", "order_score_delta_bitmask",
+           "pad_for_kernel", "order_score_ref"]

@@ -125,6 +125,81 @@ def order_score_window_pallas(rows: jnp.ndarray, node_ids: jnp.ndarray,
     return val[:, 0], idx[:, 0]
 
 
+def _order_score_window_bitmask_kernel(mask_ref, table_ref, val_ref,
+                                       idx_ref, *, block_s: int, w: int):
+    """Bitmask-consuming variant of the window kernel: consistency arrives as
+    PACKED uint32 words (core/order_scoring §Cached consistency bitmasks)
+    streamed through VMEM alongside the score tile — (BLK/32) words per tile
+    instead of the (BLK, s) PST tile plus two (BLK, s) position scratch
+    buffers. The per-slot work collapses to unpack + select + fold: no
+    gathers, no per-node compares — the paper's compare/assign-only inner
+    loop (§III-B) taken one step further. Same grid walk, same accumulator
+    fold, same first-wins tie-break as `_order_score_window_kernel`, so the
+    two paths are bitwise-interchangeable given an identical mask."""
+    b = pl.program_id(0)          # parent-set block (outer)
+    i = pl.program_id(1)          # window slot (inner)
+
+    @pl.when(jnp.logical_and(b == 0, i == 0))
+    def _init():
+        val_ref[...] = jnp.full(val_ref.shape, NEG_INF, val_ref.dtype)
+        idx_ref[...] = jnp.zeros(idx_ref.shape, idx_ref.dtype)
+
+    bw = block_s // 32
+    words = mask_ref[0, :]                        # (BLK/32,) uint32
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (bw, 32), 1)
+    bits = jnp.right_shift(words[:, None], shifts) & jnp.uint32(1)
+    consistent = (bits != 0).reshape(block_s)     # LSB-first, rank 32j+b
+
+    scores = table_ref[0, :]                      # (BLK,)
+    masked = jnp.where(consistent, scores, NEG_INF)
+    larg = jnp.argmax(masked).astype(jnp.int32)
+    lmax = jnp.max(masked)
+
+    _Z = jnp.int32(0)
+    cur = pl.load(val_ref, (i, _Z))
+    better = lmax > cur
+    pl.store(val_ref, (i, _Z), jnp.where(better, lmax, cur))
+    pl.store(idx_ref, (i, _Z),
+             jnp.where(better, larg + b * block_s, pl.load(idx_ref, (i, _Z))))
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def order_score_window_bitmask_pallas(rows: jnp.ndarray,
+                                      mask_words: jnp.ndarray, *,
+                                      block_s: int = 2048,
+                                      interpret: bool = False):
+    """(w, S) gathered rows + (w, S/32) packed consistency words ->
+    (best_val (w,), best_idx (w,)). S must be a multiple of block_s and
+    block_s a multiple of 32. The PST never enters the kernel — masks were
+    patched on the host side of the cache (update_window_planes)."""
+    w, S = rows.shape
+    assert S % block_s == 0, "pad S to a multiple of block_s"
+    assert block_s % 32 == 0, "packed words need block_s % 32 == 0"
+    bw = block_s // 32
+    grid = (S // block_s, w)
+
+    kernel = functools.partial(_order_score_window_bitmask_kernel,
+                               block_s=block_s, w=w)
+    val, idx = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bw), lambda b, i: (i, b)),         # mask words
+            pl.BlockSpec((1, block_s), lambda b, i: (i, b)),    # row tile
+        ],
+        out_specs=[
+            pl.BlockSpec((w, 1), lambda b, i: (0, 0)),          # running max
+            pl.BlockSpec((w, 1), lambda b, i: (0, 0)),          # running argmax
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((w, 1), jnp.float32),
+            jax.ShapeDtypeStruct((w, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(mask_words, rows)
+    return val[:, 0], idx[:, 0]
+
+
 @functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
 def order_score_pallas(table: jnp.ndarray, pst: jnp.ndarray, pos: jnp.ndarray,
                        *, block_s: int = 2048, interpret: bool = False):

@@ -7,10 +7,13 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .kernel import NEG_INF, order_score_pallas, order_score_window_pallas
+from .kernel import (NEG_INF, order_score_pallas,
+                     order_score_window_bitmask_pallas,
+                     order_score_window_pallas)
 from .ref import order_score_ref
 
-__all__ = ["order_score", "order_score_delta", "pad_for_kernel"]
+__all__ = ["order_score", "order_score_delta", "order_score_delta_bitmask",
+           "pad_for_kernel"]
 
 
 def pad_for_kernel(table: jnp.ndarray, pst: jnp.ndarray, block_s: int):
@@ -71,3 +74,44 @@ def order_score_delta(table: jnp.ndarray, pst: jnp.ndarray, pos: jnp.ndarray,
         val, idx = _score_nodes_blocked(rows, win, ps, pos,
                                         block=min(block_s, tbl.shape[1]))
     return splice_window(prev_ls, prev_idx, win, val, idx)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_s", "use_pallas",
+                                             "interpret"))
+def order_score_delta_bitmask(table: jnp.ndarray, cm: jnp.ndarray,
+                              pos: jnp.ndarray, prev_ls: jnp.ndarray,
+                              prev_idx: jnp.ndarray, lo: jnp.ndarray,
+                              pos_old: jnp.ndarray, planes: jnp.ndarray, *,
+                              window: int, block_s: int = 2048,
+                              use_pallas: bool = True,
+                              interpret: bool | None = None):
+    """Kernel-path bitmask-cached rescore: the cached violation planes are
+    patched with word ops (core/order_scoring.update_window_planes), and the
+    masked max+argmax streams the packed words + row tiles through VMEM
+    (order_score_window_bitmask_pallas) — the PST leaves the per-iteration
+    hot path entirely. table must already be padded to a block_s multiple
+    (pad_for_kernel), with cm/planes built on the padded shape. Same
+    extended contract as core's score_order_delta_bitmask:
+    (total, best_idx, best_ls, patched_planes)."""
+    from ...core.order_scoring import (_score_nodes_blocked_bitmask,
+                                      planes_consistent_words, splice_window,
+                                      update_window_planes, window_nodes)
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n, S = table.shape
+    assert S % block_s == 0, "pad table with pad_for_kernel first"
+    w = min(window, n)
+    win = window_nodes(pos, lo, w)
+    new_planes_win = update_window_planes(cm, pos_old, pos, win, planes[win])
+    words = planes_consistent_words(new_planes_win)
+    rows = table[win]
+    if use_pallas:
+        val, idx = order_score_window_bitmask_pallas(rows, words,
+                                                     block_s=block_s,
+                                                     interpret=interpret)
+    else:
+        val, idx = _score_nodes_blocked_bitmask(rows, words,
+                                                block=min(block_s, S))
+    tot, best_idx, best_ls = splice_window(prev_ls, prev_idx, win, val, idx)
+    return tot, best_idx, best_ls, planes.at[win].set(new_planes_win)

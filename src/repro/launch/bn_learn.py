@@ -13,10 +13,19 @@ CPU) with a disk cache (--cache-dir) so repeat runs skip the stage entirely;
 --prune-delta > 0 additionally hash-compresses the table to per-node score
 lists, and the MCMC hot path switches to the O(n*K) pruned scorer.
 
+The per-iteration engine (ISSUE 3) defaults to the bitmask-cached delta path
+on dense tables (cached consistency planes in ChainState, patched with word
+ops per proposal — --no-mask-cache reverts to the gather+compare delta);
+--adapt-window tunes the move window from the accept rate over a static
+power-of-two set and freezes it after --burn-in; --exchange-every N runs the
+cross-chain best→worst re-seed INSIDE the scan instead of only at the end.
+
 Chains are embarrassingly parallel (DP over the data/pod mesh axes at scale,
 vmap locally); the best-graph exchange at the end is the same max+argmax
 reduction the scoring kernel uses, one level up. Periodic checkpointing makes
-the walk restartable — a killed worker re-joins from the last snapshot.
+the walk restartable — a killed worker re-joins from the last snapshot (new
+ChainState leaves are backfilled when restoring a pre-bitmask snapshot, and
+the consistency planes are rebuilt from the restored positions).
 """
 from __future__ import annotations
 
@@ -30,19 +39,26 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..checkpoint import latest_step, restore_checkpoint, save_checkpoint
-from ..core import (adjacency_from_best, build_score_table, mcmc_run,
+from ..core import (adjacency_from_ranks, build_score_table, mcmc_run,
                     random_cpts, roc_point)
-from ..core.mcmc import ChainState, exchange_best, init_chain, mcmc_step
-from ..core.order_scoring import (delta_window, score_order_blocked,
-                                  score_order_delta, score_order_pruned,
-                                  score_order_pruned_delta, score_order_sum)
+from ..core.mcmc import (BitmaskDelta, ChainState, exchange_best,
+                         exchange_step, init_chain, mcmc_run_adaptive,
+                         mcmc_run_chains, mcmc_run_chains_adaptive, mcmc_step)
+from ..core.order_scoring import (build_membership_planes,
+                                  build_violation_planes, delta_window,
+                                  score_order_blocked, score_order_delta,
+                                  score_order_delta_bitmask,
+                                  score_order_pruned,
+                                  score_order_pruned_delta,
+                                  score_order_sum_cached,
+                                  score_order_sum_delta)
 from ..data.bn_sampler import ancestral_sample, inject_noise
 from ..data.networks import (alarm_adjacency, stn_adjacency,
                              synthetic_adjacency)
 from ..preprocess import SparseScoreTable, build_score_table_fused
 
 __all__ = ["LearnConfig", "learn_structure", "make_score_fn",
-           "make_delta_fn", "main"]
+           "make_delta_fn", "adaptive_window_set", "main"]
 
 
 @dataclass
@@ -59,6 +75,12 @@ class LearnConfig:
     scorer: str = "max"           # "max" (paper Eq. 6) | "sum" (baseline [5])
     window: int = 8               # bounded-move window; delta rescoring when
                                   # 2 <= window <= DELTA_CROSSOVER*n (0 = off)
+    mask_cache: bool = True       # cached consistency bitmasks on the dense
+                                  # delta paths (blocked + kernel)
+    adapt_window: bool = False    # adaptive window set + burn-in freeze
+    burn_in: int = 0              # adaptation horizon (0 = iters // 5)
+    exchange_every: int = 0       # in-scan cross-chain exchange period (0 =
+                                  # end-only reduction)
     checkpoint_every: int = 0     # 0 = off
     checkpoint_dir: str = ""
     preprocess: str = "reference"  # "reference" (core/scores host loop) |
@@ -71,11 +93,25 @@ class LearnConfig:
 
 def _padded(st, block: int):
     """(table, pst, block) with S padded to a multiple of block — shared by
-    the full and delta closures so both see identical blocks."""
+    the full and delta closures so both see identical blocks. block is
+    rounded up to a multiple of 32 so the packed consistency-mask words of
+    the bitmask cache line up with the same block structure."""
     from ..core.sharded_scoring import pad_table
     block = min(block, st.table.shape[1])
+    block = block + (-block) % 32
     table, pst = pad_table(st.table, st.pst, block)
     return table, pst, block
+
+
+def adaptive_window_set(n: int) -> tuple[int, ...]:
+    """Static candidate windows for --adapt-window: powers of two from 2 up
+    to the delta-crossover cap (each pre-traced as its own lax.switch
+    branch, so the set must stay small)."""
+    ws, w = [], 2
+    while delta_window(n, w) == w:
+        ws.append(w)
+        w *= 2
+    return tuple(ws) or (2,)
 
 
 def make_score_fn(st, cfg: LearnConfig):
@@ -91,8 +127,10 @@ def make_score_fn(st, cfg: LearnConfig):
         return functools.partial(score_order_pruned, st.kept_ls,
                                  st.kept_parents, st.kept_idx)
     if cfg.scorer == "sum":
-        # the Linderman et al. [5] baseline the paper improves on (§III-B)
-        return functools.partial(score_order_sum, st.table, st.pst)
+        # the Linderman et al. [5] baseline the paper improves on (§III-B);
+        # the _cached variant's third output is the per-node logsumexp, so
+        # the sampler's cur_ls cache feeds score_order_sum_delta
+        return functools.partial(score_order_sum_cached, st.table, st.pst)
     if cfg.use_kernel:
         from ..kernels.order_score import order_score
         return functools.partial(order_score, st.table, st.pst)
@@ -100,41 +138,93 @@ def make_score_fn(st, cfg: LearnConfig):
     return functools.partial(score_order_blocked, table, pst, block=block)
 
 
-def make_delta_fn(st, cfg: LearnConfig):
-    """(window, delta_fn) for the incremental per-iteration path, or (0, None)
-    when it doesn't apply: sum scorer (logsumexp has no per-node max cache)
-    or a window the crossover heuristic rejects."""
-    if cfg.scorer == "sum":
-        return 0, None
-    n = st.n if isinstance(st, SparseScoreTable) else st.table.shape[0]
-    w = delta_window(n, cfg.window)
-    if not w:
-        return 0, None
+def _delta_context(st, cfg: LearnConfig):
+    """(kind, tables, cm, planes_fn) — the WINDOW-INDEPENDENT state shared
+    by every per-window delta closure (built once, even when the adaptive
+    path needs one closure per candidate window): padded tables, membership
+    planes, and the chain-cache builder. planes_fn is non-None exactly when
+    the closures will be BitmaskDeltas."""
     if isinstance(st, SparseScoreTable):
-        kept = (st.kept_ls, st.kept_parents, st.kept_idx)
-
-        def sfn(pos, lo, prev_ls, prev_idx):
-            return score_order_pruned_delta(*kept, pos, prev_ls, prev_idx,
-                                            lo, window=w)
-        return w, sfn
+        return "sparse", (st.kept_ls, st.kept_parents, st.kept_idx), None, None
+    if cfg.scorer == "sum":
+        return "sum", (st.table, st.pst), None, None
     if cfg.use_kernel:
-        from ..kernels.order_score import order_score_delta
         from ..kernels.order_score.ops import pad_for_kernel
 
         # pre-pad once so the per-iteration call's pad is a no-op (the
         # blocked path hoists its padding the same way via _padded)
         ktable, kpst = pad_for_kernel(st.table, st.pst, 2048)
+        if cfg.mask_cache:
+            return "kernel", (ktable, kpst), \
+                build_membership_planes(kpst, ktable.shape[0]), \
+                functools.partial(build_violation_planes, kpst)
+        return "kernel", (ktable, kpst), None, None
+    table, pst, block = _padded(st, cfg.block)
+    if cfg.mask_cache:
+        return "blocked", (table, pst, block), \
+            build_membership_planes(pst, table.shape[0]), \
+            functools.partial(build_violation_planes, pst)
+    return "blocked", (table, pst, block), None, None
+
+
+def _delta_for_window(ctx, w: int):
+    """Delta closure for one STATIC window w ≥ 2 over a shared
+    :func:`_delta_context` — the per-window factory behind make_delta_fn and
+    the adaptive window set."""
+    kind, tables, cm, planes_fn = ctx
+    if kind == "sparse":
+        def sfn(pos, lo, prev_ls, prev_idx):
+            return score_order_pruned_delta(*tables, pos, prev_ls, prev_idx,
+                                            lo, window=w)
+        return sfn
+    if kind == "sum":
+        table, pst = tables
+
+        def lfn(pos, lo, prev_ls, prev_idx):
+            return score_order_sum_delta(table, pst, pos, prev_ls, prev_idx,
+                                         lo, window=w)
+        return lfn
+    if kind == "kernel":
+        from ..kernels.order_score import (order_score_delta,
+                                           order_score_delta_bitmask)
+
+        ktable, kpst = tables
+        if cm is not None:
+            def kbfn(pos, lo, prev_ls, prev_idx, pos_old, planes):
+                return order_score_delta_bitmask(ktable, cm, pos, prev_ls,
+                                                 prev_idx, lo, pos_old,
+                                                 planes, window=w)
+            return BitmaskDelta(kbfn)
 
         def kfn(pos, lo, prev_ls, prev_idx):
             return order_score_delta(ktable, kpst, pos, prev_ls,
                                      prev_idx, lo, window=w)
-        return w, kfn
-    table, pst, block = _padded(st, cfg.block)
+        return kfn
+    table, pst, block = tables
+    if cm is not None:
+        def bfn(pos, lo, prev_ls, prev_idx, pos_old, planes):
+            return score_order_delta_bitmask(table, cm, pos, prev_ls,
+                                             prev_idx, lo, pos_old, planes,
+                                             window=w, block=block)
+        return BitmaskDelta(bfn)
 
     def fn(pos, lo, prev_ls, prev_idx):
         return score_order_delta(table, pst, pos, prev_ls, prev_idx, lo,
                                  window=w, block=block)
-    return w, fn
+    return fn
+
+
+def make_delta_fn(st, cfg: LearnConfig):
+    """(window, delta_fn, planes_fn) for the incremental per-iteration path,
+    or (0, None, None) when the crossover heuristic rejects the window.
+    delta_fn is a BitmaskDelta (and planes_fn builds the chain's cached
+    consistency planes) on the dense max paths when cfg.mask_cache."""
+    n = st.n if isinstance(st, SparseScoreTable) else st.table.shape[0]
+    w = delta_window(n, cfg.window)
+    if not w:
+        return 0, None, None
+    ctx = _delta_context(st, cfg)
+    return w, _delta_for_window(ctx, w), ctx[3]
 
 
 def learn_structure(data: np.ndarray, cfg: LearnConfig, *,
@@ -159,24 +249,53 @@ def learn_structure(data: np.ndarray, cfg: LearnConfig, *,
     t_pre = time.time() - t0
 
     score_fn = make_score_fn(st, cfg)
-    window, delta_fn = make_delta_fn(st, cfg)
     key = jax.random.key(cfg.seed)
 
     checkpointed = bool(cfg.checkpoint_every and cfg.checkpoint_dir)
+    adaptive_ws: tuple[int, ...] = ()
+    if cfg.adapt_window:
+        if checkpointed:
+            raise ValueError("--adapt-window does not compose with "
+                             "checkpointing yet: the dual-averaging state "
+                             "would restart each segment, breaking the "
+                             "burn-in freeze contract")
+        adaptive_ws = adaptive_window_set(n)
+        ctx = _delta_context(st, cfg)        # shared: pads/planes built ONCE
+        delta_fns = tuple(_delta_for_window(ctx, w) for w in adaptive_ws)
+        window, delta_fn, planes_fn = 0, None, ctx[3]
+        burn_in = cfg.burn_in or cfg.iters // 5
+    else:
+        window, delta_fn, planes_fn = make_delta_fn(st, cfg)
 
     t0 = time.time()
     if not checkpointed:
-        if cfg.chains == 1:
+        if cfg.adapt_window:
+            if cfg.chains == 1:
+                state, _ = mcmc_run_adaptive(
+                    key, n, score_fn, cfg.iters, windows=adaptive_ws,
+                    delta_fns=delta_fns, planes_fn=planes_fn,
+                    burn_in=burn_in)
+                best_score, best_idx = state.best_score, state.best_idx
+                accepts = state.accepts
+            else:
+                states = mcmc_run_chains_adaptive(
+                    key, cfg.chains, n, score_fn, cfg.iters,
+                    windows=adaptive_ws, delta_fns=delta_fns,
+                    planes_fn=planes_fn, burn_in=burn_in,
+                    exchange_every=cfg.exchange_every)
+                best_score, best_idx, _ = exchange_best(states)
+                accepts = states.accepts.sum()
+        elif cfg.chains == 1:
             state, _ = mcmc_run(key, n, score_fn, cfg.iters,
-                                delta_fn=delta_fn, window=window)
+                                delta_fn=delta_fn, window=window,
+                                planes_fn=planes_fn)
             best_score, best_idx = state.best_score, state.best_idx
             accepts = state.accepts
         else:
-            keys = jax.random.split(key, cfg.chains)
-            run = functools.partial(mcmc_run, n=n, score_fn=score_fn,
-                                    iters=cfg.iters, delta_fn=delta_fn,
-                                    window=window)
-            states, _ = jax.vmap(lambda k: run(k))(keys)
+            states = mcmc_run_chains(key, cfg.chains, n, score_fn, cfg.iters,
+                                     delta_fn=delta_fn, window=window,
+                                     exchange_every=cfg.exchange_every,
+                                     planes_fn=planes_fn)
             best_score, best_idx, _ = exchange_best(states)
             accepts = states.accepts.sum()
         jax.block_until_ready(best_score)
@@ -184,41 +303,66 @@ def learn_structure(data: np.ndarray, cfg: LearnConfig, *,
         # checkpointed path: segment the walk, snapshot between segments
         seg = cfg.checkpoint_every
         keys = jax.random.split(key, cfg.chains)
-        states = jax.vmap(lambda k: init_chain(k, n, score_fn))(keys)
-        # typed PRNG keys are not numpy-serializable: snapshot the key data
+        states = jax.vmap(
+            lambda k: init_chain(k, n, score_fn, planes_fn=planes_fn))(keys)
+        # typed PRNG keys are not numpy-serializable: snapshot the key data;
+        # the consistency planes are a pos-derived cache — snapshot a
+        # zero-size stand-in and rebuild after restore (smaller checkpoints,
+        # and pre-tentpole 9-leaf snapshots restore through the same path)
+        dummy_planes = jnp.zeros((cfg.chains, 0), jnp.uint32)
         pack = lambda st: jax.tree.map(
-            np.asarray, st._replace(key=jax.random.key_data(st.key)))
+            np.asarray, st._replace(key=jax.random.key_data(st.key),
+                                    mask_planes=dummy_planes))
         unpack = lambda t: ChainState(*t)._replace(
             key=jax.random.wrap_key_data(jnp.asarray(t[0])))
         done = latest_step(cfg.checkpoint_dir)
         if done is not None:
             restored, _ = restore_checkpoint(cfg.checkpoint_dir,
-                                             tuple(pack(states)), step=done)
+                                             tuple(pack(states)), step=done,
+                                             allow_missing=True)
             states = unpack(jax.tree.map(jnp.asarray, tuple(restored)))
+            if planes_fn is not None:
+                states = states._replace(
+                    mask_planes=jax.vmap(planes_fn)(states.pos))
         else:
             done = 0
 
+        exch = cfg.exchange_every if cfg.chains > 1 else 0
+
         @jax.jit
-        def run_segment(states):
-            def body(st, _):
-                return jax.vmap(
-                    lambda s: mcmc_step(s, score_fn, delta_fn, window))(st), None
-            states, _ = jax.lax.scan(body, states, None, length=seg)
+        def run_segment(states, start):
+            def body(st, i):
+                st = jax.vmap(
+                    lambda s: mcmc_step(s, score_fn, delta_fn, window))(st)
+                if exch:
+                    # honor the REQUESTED exchange period across segment and
+                    # restart boundaries: `start` is the global iteration
+                    # offset, so the cadence survives checkpoint resume
+                    st = jax.lax.cond((start + i + 1) % exch == 0,
+                                      exchange_step, lambda s: s, st)
+                return st, None
+            states, _ = jax.lax.scan(body, states, jnp.arange(seg))
             return states
 
         while done < cfg.iters:
-            states = run_segment(states)
+            states = run_segment(states, jnp.int32(done))
             done += seg
             save_checkpoint(cfg.checkpoint_dir, done, tuple(pack(states)))
         best_score, best_idx, _ = exchange_best(states)
         accepts = states.accepts.sum()
     t_iter = time.time() - t0
 
-    adj = adjacency_from_best(np.asarray(best_idx), np.asarray(st.pst))
+    # rank-decoded adjacency (Algorithm 2 in reverse): identical to the old
+    # PST row lookup, but works from the O(n*K) pruned representation too
+    adj = adjacency_from_ranks(np.asarray(best_idx), s=cfg.s)
     total_prop = cfg.iters * max(cfg.chains, 1)
     return {
         "adjacency": adj,
         "delta_window": window,       # 0 = full rescore every iteration
+        "adaptive_windows": list(adaptive_ws),
+        "mask_cache": isinstance(delta_fn, BitmaskDelta) or
+                      (cfg.adapt_window and planes_fn is not None),
+        "exchange_every": cfg.exchange_every,
         "score": float(best_score),
         "preprocess_s": t_pre,
         "preprocess_cache_hit": cache_hit,
@@ -257,6 +401,20 @@ def main(argv=None) -> dict:
     ap.add_argument("--use-kernel", action="store_true")
     ap.add_argument("--window", type=int, default=8,
                     help="bounded-move window for delta rescoring (0 = full)")
+    ap.add_argument("--no-mask-cache", action="store_true",
+                    help="disable the cached consistency bitmasks on the "
+                         "dense delta paths (debug / A-B timing)")
+    ap.add_argument("--adapt-window", action="store_true",
+                    help="tune the move window from the running accept rate "
+                         "over a static power-of-two set; frozen after "
+                         "--burn-in iterations (MCMC validity)")
+    ap.add_argument("--burn-in", type=int, default=0,
+                    help="adaptation horizon for --adapt-window "
+                         "(0 = iters // 5)")
+    ap.add_argument("--exchange-every", type=int, default=0,
+                    help="> 0: in-scan cross-chain exchange period — the "
+                         "best chain re-seeds the worst every this many "
+                         "iterations (0 = end-only reduction)")
     ap.add_argument("--preprocess", default="reference",
                     choices=["reference", "fused"],
                     help="score-table construction: core/scores host loop or "
@@ -274,12 +432,27 @@ def main(argv=None) -> dict:
 
     truth, data = _network_data(args.network, args.samples, args.q, args.seed,
                                 n_synth=args.n)
+    n_nodes = truth.shape[0]
+    # reject degenerate windows HERE, with a readable message, instead of
+    # letting propose_move silently clamp (window > n) or trace garbage
+    # (window == 1 has no in-window move) deep inside the jit
+    if args.window == 1 or args.window < 0:
+        ap.error(f"--window {args.window} is invalid: the bounded-move "
+                 "mixture needs window >= 2 (use --window 0 for the legacy "
+                 "full-rescore transposition walk)")
+    if args.window > n_nodes:
+        ap.error(f"--window {args.window} exceeds the network's n="
+                 f"{n_nodes} nodes; pick 2 <= window <= {n_nodes} (or 0) — "
+                 "oversized windows would only be silently clamped")
     if args.noise:
         data = inject_noise(np.random.default_rng(args.seed + 1), data,
                             args.noise, args.q)
     cfg = LearnConfig(q=args.q, s=args.s, iters=args.iters,
                       chains=args.chains, seed=args.seed,
                       use_kernel=args.use_kernel, window=args.window,
+                      mask_cache=not args.no_mask_cache,
+                      adapt_window=args.adapt_window, burn_in=args.burn_in,
+                      exchange_every=args.exchange_every,
                       preprocess=args.preprocess,
                       prune_delta=args.prune_delta,
                       cache_dir=(args.cache_dir if args.preprocess == "fused"
@@ -289,8 +462,16 @@ def main(argv=None) -> dict:
     out = learn_structure(data, cfg)
     fp, tp = roc_point(out["adjacency"], truth)
     out["tp_rate"], out["fp_rate"] = tp, fp
-    mode = (f"delta(w={out['delta_window']})" if out["delta_window"]
-            else "full")
+    if out["adaptive_windows"]:
+        mode = f"adaptive(w∈{{{','.join(map(str, out['adaptive_windows']))}}})"
+    elif out["delta_window"]:
+        mode = f"delta(w={out['delta_window']})"
+    else:
+        mode = "full"
+    if out["mask_cache"]:
+        mode += "+bitmask"
+    if out["exchange_every"]:
+        mode += f"+exch({out['exchange_every']})"
     pre = f"pre={out['preprocess_s']:.2f}s"
     if args.preprocess == "fused":
         pre += " (fused, cache hit)" if out["preprocess_cache_hit"] \

@@ -198,7 +198,13 @@ def run_bn_cell(multi_pod: bool, *, n: int = 60, s: int = 4,
         best_score=jax.ShapeDtypeStruct((C,), jnp.float32),
         best_idx=jax.ShapeDtypeStruct((C, n), jnp.int32),
         best_pos=jax.ShapeDtypeStruct((C, n), jnp.int32),
-        accepts=jax.ShapeDtypeStruct((C,), jnp.int32))
+        accepts=jax.ShapeDtypeStruct((C,), jnp.int32),
+        # bitmask cache placeholder (the sharded path recomputes window
+        # masks per shard — ROADMAP: shard the planes over `model` next)
+        mask_planes=jax.ShapeDtypeStruct((C, 0), jnp.uint32),
+        win_idx=jax.ShapeDtypeStruct((C,), jnp.int32),
+        adapt_err=jax.ShapeDtypeStruct((C,), jnp.float32),
+        step=jax.ShapeDtypeStruct((C,), jnp.int32))
     table = jax.ShapeDtypeStruct((n, S_pad), jnp.float32)
     pst = jax.ShapeDtypeStruct((S_pad, s), jnp.int32)
 

@@ -48,21 +48,25 @@ class SparseScoreTable:
     """Per-node pruned score lists with open-addressing lookup.
 
     Duck-types the parts of core.scores.ScoreTable the driver uses (`n`, `S`,
-    `pst`, `psizes`, `q`, `s`, and a `table` property materialising the exact
-    dense fallback), so core/order_scoring, core/mcmc and launch/bn_learn
-    accept either representation.
+    `q`, `s`, and a `table` property materialising the exact dense fallback),
+    so core/order_scoring, core/mcmc and launch/bn_learn accept either
+    representation. Deliberately does NOT keep the (S, s) PST or (S,) psizes:
+    every stored array is O(n·K) — adjacency recovery decodes the winning
+    ranks arithmetically instead (core.graph.adjacency_from_ranks), which is
+    the paper's Algorithm 2 run in reverse and was the last O(S·s)
+    hanger-on in the pruned path's memory footprint.
     """
 
     def __init__(self, *, keys, vals, kept_idx, kept_ls, kept_parents,
-                 max_probe, pst, psizes, q, s, delta, S):
+                 max_probe, q, s, delta, S, pst=None, psizes=None):
+        # pst/psizes accepted (and ignored) for builder-signature stability
+        del pst, psizes
         self.keys = jnp.asarray(keys)                # (n, cap) int32, -1 empty
         self.vals = jnp.asarray(vals)                # (n, cap) f32
         self.kept_idx = jnp.asarray(kept_idx)        # (n, K) int32, -1 pad
         self.kept_ls = jnp.asarray(kept_ls)          # (n, K) f32, NEG_INF pad
         self.kept_parents = jnp.asarray(kept_parents)  # (n, K, s) node ids
         self.max_probe = int(max_probe)
-        self.pst = jnp.asarray(pst)
-        self.psizes = jnp.asarray(psizes)
         self.q = q
         self.s = s
         self.delta = float(delta)

@@ -1,0 +1,339 @@
+"""The ISSUE 3 engine: cached consistency bitmasks ≡ recomputed masks
+(bitwise, over move SEQUENCES), adaptive-window freeze, in-scan
+exchange_best invariants, and restore of the extended ChainState from a
+pre-tentpole checkpoint layout.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _propcheck import given, hst, settings
+
+from repro.core.combinatorics import build_pst, n_parent_sets
+from repro.core.mcmc import (BitmaskDelta, ChainState, exchange_best,
+                             exchange_step, init_chain, mcmc_run,
+                             mcmc_run_adaptive, mcmc_run_chains, propose_move)
+from repro.core.order_scoring import (NEG_INF, build_membership_planes,
+                                      build_violation_planes, consistent_mask,
+                                      pack_mask_words,
+                                      planes_consistent_words,
+                                      score_order_blocked,
+                                      score_order_delta_bitmask,
+                                      unpack_mask_words)
+
+
+@functools.lru_cache(maxsize=None)
+def _problem(n=12, s=3, block=64, seed=42):
+    S = n_parent_sets(n - 1, s)
+    pst, _ = build_pst(n - 1, s)
+    rng = np.random.default_rng(seed)
+    table = jnp.asarray(rng.normal(-40, 8, (n, S)).astype(np.float32))
+    pad = (-S) % block
+    table = jnp.pad(table, ((0, 0), (0, pad)), constant_values=NEG_INF)
+    pst = jnp.pad(jnp.asarray(pst), ((0, pad), (0, 0)), constant_values=-1)
+    cm = build_membership_planes(pst, n)
+    return table, pst, cm
+
+
+def test_pack_unpack_roundtrip_and_init_planes_match_masks():
+    """Packed word layout (LSB-first, rank 32j+b) roundtrips, and the
+    freshly-built violation planes decode to exactly consistent_mask for
+    every node."""
+    table, pst, _ = _problem()
+    n = table.shape[0]
+    rng = np.random.default_rng(0)
+    bits = rng.integers(0, 2, 256).astype(bool)
+    np.testing.assert_array_equal(
+        np.asarray(unpack_mask_words(pack_mask_words(jnp.asarray(bits)))),
+        bits)
+    pos = jnp.asarray(rng.permutation(n).astype(np.int32))
+    planes = build_violation_planes(pst, pos)
+    for i in range(n):
+        want = np.asarray(consistent_mask(pst, jnp.int32(i), pos))
+        got = np.asarray(unpack_mask_words(planes_consistent_words(planes[i])))
+        np.testing.assert_array_equal(got, want)
+
+
+@given(hst.integers(0, 2**31 - 1))
+@settings(max_examples=200, deadline=None)
+def test_bitmask_cache_equals_recomputed_masks(seed):
+    """≥200 randomized move SEQUENCES: the incrementally-patched planes stay
+    bitwise-equal to planes rebuilt from scratch, and the bitmask delta
+    rescore stays bitwise-equal to a full blocked rescore — total, argmax
+    parent sets, per-node scores — across 4 chained moves."""
+    block = 64
+    table, pst, cm = _problem(block=block)
+    n = table.shape[0]
+    rng = np.random.default_rng(seed)
+    pos = jnp.asarray(rng.permutation(n).astype(np.int32))
+    planes = build_violation_planes(pst, pos)
+    _, idx, ls = score_order_blocked(table, pst, pos, block=block)
+    key = jax.random.key(seed)
+    for _ in range(4):
+        key, k_mv = jax.random.split(key)
+        w = int(rng.integers(2, 7))
+        new_pos, lo = propose_move(k_mv, pos, window=w)
+        tot, gidx, gls, new_planes = score_order_delta_bitmask(
+            table, cm, new_pos, ls, idx, lo, pos, planes, window=w,
+            block=block)
+        want = score_order_blocked(table, pst, new_pos, block=block)
+        assert float(tot) == float(want[0])
+        np.testing.assert_array_equal(np.asarray(gidx), np.asarray(want[1]))
+        np.testing.assert_array_equal(np.asarray(gls), np.asarray(want[2]))
+        np.testing.assert_array_equal(
+            np.asarray(new_planes),
+            np.asarray(build_violation_planes(pst, new_pos)))
+        pos, planes, idx, ls = new_pos, new_planes, want[1], want[2]
+
+
+def test_mcmc_bitmask_chain_is_bitwise_identical(padded_random_table):
+    """Same key, same proposals: the bitmask-cached chain and the
+    full-rescore chain traverse identical states, and the carried planes
+    always describe the CURRENT order."""
+    table, pst, block = padded_random_table
+    n = table.shape[0]
+    cm = build_membership_planes(pst, n)
+    fn = functools.partial(score_order_blocked, table, pst, block=block)
+    planes_fn = functools.partial(build_violation_planes, pst)
+
+    def bfn(pos, lo, prev_ls, prev_idx, pos_old, planes):
+        return score_order_delta_bitmask(table, cm, pos, prev_ls, prev_idx,
+                                         lo, pos_old, planes, window=4,
+                                         block=block)
+
+    a, _ = mcmc_run(jax.random.key(3), n, fn, 300, window=4)
+    b, _ = mcmc_run(jax.random.key(3), n, fn, 300,
+                    delta_fn=BitmaskDelta(bfn), window=4,
+                    planes_fn=planes_fn)
+    assert float(a.score) == float(b.score)
+    assert float(a.best_score) == float(b.best_score)
+    assert int(a.accepts) == int(b.accepts)
+    np.testing.assert_array_equal(np.asarray(a.pos), np.asarray(b.pos))
+    np.testing.assert_array_equal(np.asarray(a.best_idx),
+                                  np.asarray(b.best_idx))
+    np.testing.assert_array_equal(np.asarray(a.cur_ls), np.asarray(b.cur_ls))
+    np.testing.assert_array_equal(np.asarray(b.mask_planes),
+                                  np.asarray(planes_fn(b.pos)))
+
+
+def test_kernel_bitmask_variant_matches_core(padded_random_table):
+    """The packed-word Pallas kernel (interpret mode) == the jnp bitmask
+    scorer == the gather-path blocked scorer, bitwise."""
+    from repro.kernels.order_score import order_score_delta_bitmask
+
+    table, pst, block = padded_random_table
+    n = table.shape[0]
+    cm = build_membership_planes(pst, n)
+    rng = np.random.default_rng(7)
+    pos = jnp.asarray(rng.permutation(n).astype(np.int32))
+    planes = build_violation_planes(pst, pos)
+    _, idx, ls = score_order_blocked(table, pst, pos, block=block)
+    for seed in range(3):
+        new_pos, lo = propose_move(jax.random.key(seed), pos, window=3)
+        want = score_order_blocked(table, pst, new_pos, block=block)
+        for use_pallas in (True, False):
+            got = order_score_delta_bitmask(
+                table, cm, new_pos, ls, idx, lo, pos, planes, window=3,
+                block_s=block, use_pallas=use_pallas, interpret=True)
+            assert float(got[0]) == float(want[0])
+            np.testing.assert_array_equal(np.asarray(got[1]),
+                                          np.asarray(want[1]))
+            np.testing.assert_array_equal(np.asarray(got[2]),
+                                          np.asarray(want[2]))
+        pos, planes = new_pos, got[3]
+        idx, ls = want[1], want[2]
+
+
+# ------------------------------------------------- in-scan exchange_best
+@pytest.fixture(scope="module")
+def small_problem():
+    table, pst, cm = _problem()
+    block = 64
+    fn = functools.partial(score_order_blocked, table, pst, block=block)
+    return table, pst, cm, block, fn
+
+
+def test_exchange_step_reseeds_worst_from_best(small_problem):
+    """exchange_step: the worst chain inherits the best chain's position AND
+    cache state together; everyone's best_score is monotone; keys stay
+    per-slot."""
+    _, _, _, _, fn = small_problem
+    n = 12
+    keys = jax.random.split(jax.random.key(0), 4)
+    states = jax.vmap(lambda k: init_chain(k, n, fn))(keys)
+    # make the ranking unambiguous
+    states = states._replace(best_score=jnp.asarray([3., -9., 1., 2.],
+                                                    jnp.float32))
+    before = np.asarray(states.best_score)
+    out = jax.jit(exchange_step)(states)
+    b, w = int(np.argmax(before)), int(np.argmin(before))
+    np.testing.assert_array_equal(np.asarray(out.pos[w]),
+                                  np.asarray(states.pos[b]))
+    assert float(out.score[w]) == float(states.score[b])
+    np.testing.assert_array_equal(np.asarray(out.cur_idx[w]),
+                                  np.asarray(states.cur_idx[b]))
+    np.testing.assert_array_equal(np.asarray(out.cur_ls[w]),
+                                  np.asarray(states.cur_ls[b]))
+    assert float(out.best_score[w]) == float(before[b])
+    # monotone: nobody's best got worse
+    assert (np.asarray(out.best_score) >= before).all()
+    # PRNG keys unchanged (clones diverge immediately)
+    np.testing.assert_array_equal(
+        np.asarray(jax.random.key_data(out.key)),
+        np.asarray(jax.random.key_data(states.key)))
+    # untouched chains are bitwise-identical
+    for c in range(4):
+        if c != w:
+            np.testing.assert_array_equal(np.asarray(out.pos[c]),
+                                          np.asarray(states.pos[c]))
+
+
+def test_mcmc_run_chains_in_scan_exchange_invariants(small_problem):
+    """After a run WITH periodic exchange: every chain's (score, cur_idx,
+    cur_ls, mask_planes) still describe its own pos — the re-seed copied
+    caches consistently — and the final reduction returns a reproducible
+    best triple."""
+    table, pst, cm, block, fn = small_problem
+    n = 12
+    planes_fn = functools.partial(build_violation_planes, pst)
+
+    def bfn(pos, lo, prev_ls, prev_idx, pos_old, planes):
+        return score_order_delta_bitmask(table, cm, pos, prev_ls, prev_idx,
+                                         lo, pos_old, planes, window=4,
+                                         block=block)
+
+    states = mcmc_run_chains(jax.random.key(5), 4, n, fn, 120,
+                             delta_fn=BitmaskDelta(bfn), window=4,
+                             exchange_every=25, planes_fn=planes_fn)
+    for c in range(4):
+        sc, idx, ls = fn(states.pos[c])
+        assert float(sc) == float(states.score[c])
+        np.testing.assert_array_equal(np.asarray(idx),
+                                      np.asarray(states.cur_idx[c]))
+        np.testing.assert_array_equal(np.asarray(ls),
+                                      np.asarray(states.cur_ls[c]))
+        np.testing.assert_array_equal(
+            np.asarray(states.mask_planes[c]),
+            np.asarray(planes_fn(states.pos[c])))
+        assert float(states.best_score[c]) >= float(states.score[c]) - 1e-4
+    bs, bi, bp = exchange_best(states)
+    sc, idx, _ = fn(bp)
+    assert float(sc) == float(bs)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(bi))
+
+
+def test_mcmc_run_chains_exchange_off_matches_legacy(small_problem):
+    """exchange_every=0 keeps chains fully independent: identical to vmapped
+    mcmc_run with the same keys."""
+    _, _, _, _, fn = small_problem
+    n = 12
+    a = mcmc_run_chains(jax.random.key(2), 3, n, fn, 80, window=4)
+    keys = jax.random.split(jax.random.key(2), 3)
+    b, _ = jax.vmap(lambda k: mcmc_run(k, n, fn, 80, window=4))(keys)
+    np.testing.assert_array_equal(np.asarray(a.pos), np.asarray(b.pos))
+    np.testing.assert_array_equal(np.asarray(a.best_score),
+                                  np.asarray(b.best_score))
+
+
+# ------------------------------------------------- adaptive move windows
+def test_adaptive_window_freezes_after_burn_in(small_problem):
+    """win_idx stops moving once step >= burn_in (MCMC validity: post-warmup
+    samples come from ONE fixed kernel), stays inside the static set, and
+    the chain's caches remain consistent with its pos."""
+    _, _, _, _, fn = small_problem
+    n = 12
+    st, (tr_sc, tr_w) = mcmc_run_adaptive(
+        jax.random.key(7), n, fn, 150, windows=(2, 4, 6),
+        delta_fns=(None, None, None), burn_in=60, trace=True)
+    tw = np.asarray(tr_w)
+    assert set(tw.tolist()) <= {0, 1, 2}
+    assert len(set(tw[60:].tolist())) == 1, "window kept adapting past burn-in"
+    assert 0 < int(st.accepts) <= 150
+    sc, idx, ls = fn(st.pos)
+    assert float(sc) == float(st.score)
+    assert float(st.best_score) >= float(np.max(np.asarray(tr_sc))) - 1e-4
+
+
+def test_adaptive_flat_table_accepts_everything(small_problem):
+    """On a constant table every proposal is accepted regardless of which
+    window branch fired — the adaptive mixture preserves move symmetry."""
+    n = 12
+    fn = lambda pos: (jnp.float32(0.0), jnp.zeros(n, jnp.int32),
+                      jnp.zeros(n, jnp.float32))
+    st, _ = mcmc_run_adaptive(jax.random.key(9), n, fn, 100,
+                              windows=(2, 4), delta_fns=(None, None),
+                              burn_in=30)
+    assert int(st.accepts) == 100
+
+
+# ------------------------------------------------- checkpoint compatibility
+def test_restore_extended_chainstate_from_pre_tentpole_checkpoint(
+        tmp_path, small_problem):
+    """A checkpoint written with the OLD 9-leaf ChainState layout restores
+    into the extended 13-leaf state: old leaves land bitwise, new leaves keep
+    the caller's freshly-initialised values (allow_missing), and the planes
+    rebuilt from the restored pos let the bitmask chain continue."""
+    from repro.checkpoint import restore_checkpoint, save_checkpoint
+
+    table, pst, cm, block, fn = small_problem
+    n = 12
+    keys = jax.random.split(jax.random.key(1), 2)
+    planes_fn = functools.partial(build_violation_planes, pst)
+    states = jax.vmap(
+        lambda k: init_chain(k, n, fn, planes_fn=planes_fn))(keys)
+    pack = lambda st: jax.tree.map(
+        np.asarray, st._replace(key=jax.random.key_data(st.key)))
+    full = tuple(pack(states))
+
+    # pre-tentpole snapshot: exactly the first 9 ChainState leaves
+    old_layout = full[:9]
+    save_checkpoint(str(tmp_path), 7, old_layout)
+
+    # strict restore of the 13-leaf layout must fail loudly...
+    with pytest.raises(ValueError, match="mismatch"):
+        restore_checkpoint(str(tmp_path), full, step=7)
+    # ...allow_missing backfills the new trailing leaves from the template
+    restored, meta = restore_checkpoint(str(tmp_path), full, step=7,
+                                        allow_missing=True)
+    assert len(meta["missing_leaves"]) == 4
+    for got, want in zip(restored[:9], full[:9]):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    st2 = ChainState(*[jnp.asarray(x) for x in restored])._replace(
+        key=jax.random.wrap_key_data(jnp.asarray(restored[0])))
+    # derived cache: rebuild planes from the restored positions and resume
+    st2 = st2._replace(mask_planes=jax.vmap(planes_fn)(st2.pos))
+
+    def bfn(pos, lo, prev_ls, prev_idx, pos_old, planes):
+        return score_order_delta_bitmask(table, cm, pos, prev_ls, prev_idx,
+                                         lo, pos_old, planes, window=4,
+                                         block=block)
+
+    from repro.core.mcmc import mcmc_step
+    step = jax.jit(jax.vmap(
+        lambda s: mcmc_step(s, fn, BitmaskDelta(bfn), 4)))
+    for _ in range(5):
+        st2 = step(st2)
+    for c in range(2):
+        sc, idx, ls = fn(st2.pos[c])
+        assert float(sc) == float(st2.score[c])
+        np.testing.assert_array_equal(np.asarray(ls),
+                                      np.asarray(st2.cur_ls[c]))
+
+
+def test_new_leaves_roundtrip_through_checkpoint(tmp_path, small_problem):
+    """Forward path: the 13-leaf layout saves and strict-restores bitwise."""
+    from repro.checkpoint import restore_checkpoint, save_checkpoint
+
+    _, pst, _, _, fn = small_problem
+    n = 12
+    planes_fn = functools.partial(build_violation_planes, pst)
+    st = init_chain(jax.random.key(4), n, fn, planes_fn=planes_fn)
+    pack = tuple(jax.tree.map(
+        np.asarray, st._replace(key=jax.random.key_data(st.key))))
+    save_checkpoint(str(tmp_path), 1, pack)
+    restored, meta = restore_checkpoint(str(tmp_path), pack, step=1)
+    assert "missing_leaves" not in meta
+    for got, want in zip(restored, pack):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -10,7 +10,7 @@ from repro.core.combinatorics import (build_pst, candidates_to_nodes,
                                       rank_combination,
                                       rank_combinations_batch,
                                       rank_parent_set, size_offsets,
-                                      unrank_combination)
+                                      unrank_combination, unrank_parent_set)
 
 
 @pytest.mark.parametrize("n,s", [(6, 3), (9, 2), (12, 4)])
@@ -93,3 +93,34 @@ def test_pst_memory_matches_paper_figure():
     S = n_parent_sets(59, 4)
     mb = S * 4 * 4 / 2**20  # S rows x 4 int32
     assert 7.0 < mb < 9.0
+
+
+@pytest.mark.parametrize("nc,s", [(7, 3), (11, 2), (10, 4)])
+def test_unrank_parent_set_inverts_pst_rows(nc, s):
+    """unrank_parent_set decodes EVERY global rank back to its build_pst row
+    — the no-PST adjacency path (ISSUE 3 satellite) cannot drift from the
+    materialized table."""
+    pst, sizes = build_pst(nc, s)
+    for t in range(pst.shape[0]):
+        cands = unrank_parent_set(nc, s, t)
+        row = pst[t][pst[t] >= 0]
+        np.testing.assert_array_equal(np.sort(cands), np.sort(row))
+        assert len(cands) == sizes[t]
+    with pytest.raises(ValueError):
+        unrank_parent_set(nc, s, pst.shape[0])
+    with pytest.raises(ValueError):
+        unrank_parent_set(nc, s, -1)
+
+
+def test_adjacency_from_ranks_matches_pst_lookup():
+    """adjacency_from_ranks == adjacency_from_best on random winning ranks."""
+    from repro.core.graph import adjacency_from_best, adjacency_from_ranks
+
+    n, s = 9, 3
+    pst, _ = build_pst(n - 1, s)
+    rng = np.random.default_rng(5)
+    for _ in range(20):
+        best_idx = rng.integers(0, pst.shape[0], size=n)
+        want = adjacency_from_best(best_idx, pst)
+        got = adjacency_from_ranks(best_idx, s=s)
+        np.testing.assert_array_equal(got, want)

@@ -18,7 +18,9 @@ from repro.core.mcmc import mcmc_run, propose_move
 from repro.core.order_scoring import (NEG_INF, delta_window,
                                       score_order_blocked,
                                       score_order_chunked, score_order_delta,
-                                      score_order_ref)
+                                      score_order_ref, score_order_sum,
+                                      score_order_sum_cached,
+                                      score_order_sum_delta)
 
 
 @functools.lru_cache(maxsize=None)
@@ -120,6 +122,33 @@ def test_mcmc_delta_chain_is_bitwise_identical(padded_random_table):
     np.testing.assert_array_equal(np.asarray(a.best_idx),
                                   np.asarray(b.best_idx))
     np.testing.assert_array_equal(np.asarray(a.cur_ls), np.asarray(b.cur_ls))
+
+
+@given(hst.integers(0, 2**31 - 1))
+@settings(max_examples=60, deadline=None)
+def test_sum_delta_equals_full(seed):
+    """The sum (logsumexp) baseline's incremental path (ISSUE 3 satellite):
+    the per-node running-logsumexp cache spliced through splice_window is
+    bitwise-equal to a full score_order_sum_cached rescore, and the cached
+    variant's total matches the original score_order_sum."""
+    table, pst = _random_problem()
+    n = table.shape[0]
+    rng = np.random.default_rng(seed)
+    pos = jnp.asarray(rng.permutation(n).astype(np.int32))
+    tot, idx, lse = score_order_sum_cached(table, pst, pos)
+    ref_tot, ref_idx, _ = score_order_sum(table, pst, pos)
+    # cached vs the LEGACY scorer: same math, separately-jitted programs,
+    # so only up-to-rounding equality (XLA fuses the reductions differently);
+    # the bitwise contract below is delta vs cached-full (shared _sum_nodes)
+    np.testing.assert_allclose(float(tot), float(ref_tot), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ref_idx))
+    w = int(rng.integers(2, 7))
+    new_pos, lo = propose_move(jax.random.key(seed), pos, window=w)
+    got = score_order_sum_delta(table, pst, new_pos, lse, idx, lo, window=w)
+    want = score_order_sum_cached(table, pst, new_pos)
+    assert float(got[0]) == float(want[0])
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+    np.testing.assert_array_equal(np.asarray(got[2]), np.asarray(want[2]))
 
 
 def test_delta_window_crossover():

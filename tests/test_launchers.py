@@ -39,3 +39,27 @@ def test_bn_learn_cli():
                          "--samples", "200"])
     assert np.isfinite(out["score"])
     assert out["adjacency"].shape == (11, 11)
+
+
+def test_bn_learn_cli_rejects_degenerate_windows():
+    """--window 1 (no in-window move) and --window > n (would be silently
+    clamped mid-trace) fail FAST with a readable argparse error."""
+    from repro.launch import bn_learn
+    for bad in ("1", "-3", "12"):        # stn has n=11 nodes
+        with pytest.raises(SystemExit):
+            bn_learn.main(["--network", "stn", "--iters", "10",
+                           "--samples", "50", "--window", bad])
+    # boundary: window == n is legal (delta may still reject via crossover)
+    out = bn_learn.main(["--network", "stn", "--iters", "10",
+                         "--samples", "50", "--window", "11"])
+    assert np.isfinite(out["score"])
+
+
+def test_bn_learn_cli_adaptive_and_exchange():
+    """--adapt-window and --exchange-every compose through the CLI."""
+    from repro.launch import bn_learn
+    out = bn_learn.main(["--network", "stn", "--iters", "60", "--chains", "2",
+                         "--samples", "200", "--adapt-window",
+                         "--burn-in", "20", "--exchange-every", "15"])
+    assert np.isfinite(out["score"])
+    assert out["adaptive_windows"] == [2, 4]       # n=11 caps the set at 4
