@@ -3,6 +3,7 @@ PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: test bench-smoke bench-delta bench-mcmc bench-mcmc-smoke \
+        bench-mcmc-sharded bench-mcmc-sharded-smoke \
         bench-preprocess bench-preprocess-smoke
 
 test:
@@ -21,6 +22,14 @@ bench-mcmc:
 
 bench-mcmc-smoke:
 	$(PY) benchmarks/mcmc_bench.py --smoke
+
+# the sharded pair runs on a simulated 4-device host mesh (the bench forces
+# the device count itself); results mirror to repo-root BENCH_mcmc_sharded.json
+bench-mcmc-sharded:
+	$(PY) benchmarks/mcmc_bench.py --sharded
+
+bench-mcmc-sharded-smoke:
+	$(PY) benchmarks/mcmc_bench.py --sharded --smoke
 
 bench-preprocess:
 	$(PY) benchmarks/preprocess_bench.py

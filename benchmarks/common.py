@@ -10,6 +10,10 @@ import numpy as np
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                            "bench")
+# every BENCH_*.json is mirrored to the repo root so the perf trajectory is
+# machine-readable without digging into experiments/ (CI and make bench-*
+# rely on this)
+ROOT_DIR = os.path.join(os.path.dirname(__file__), "..")
 
 
 def timeit(fn, *args, warmup: int = 1, reps: int = 3) -> float:
@@ -26,8 +30,10 @@ def timeit(fn, *args, warmup: int = 1, reps: int = 3) -> float:
 
 def save(name: str, payload) -> None:
     os.makedirs(RESULTS_DIR, exist_ok=True)
-    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
-        json.dump(payload, f, indent=1, default=float)
+    dirs = [RESULTS_DIR] + ([ROOT_DIR] if name.startswith("BENCH_") else [])
+    for d in dirs:
+        with open(os.path.join(d, f"{name}.json"), "w") as f:
+            json.dump(payload, f, indent=1, default=float)
 
 
 def emit(name: str, rows: list[dict]) -> None:

@@ -366,18 +366,28 @@ def exchange_step(states: ChainState) -> ChainState:
     per-chain best_score monotone). PRNG keys, accept counts and adaptive
     stats stay per-slot, so the clone diverges immediately — the same
     re-seeding discipline as runtime/straggler.rebalance_chains, applied
-    inside the scan instead of at the end."""
+    inside the scan instead of at the end.
+
+    Degenerate ranking (all-equal best_score — e.g. early iterations, or a
+    flat table) gives argmax == argmin: there is no information to transfer,
+    so the exchange is explicitly a NO-OP instead of a self-copy — no leaf
+    traffic (mask_planes can be large and mesh-sharded), and the invariant
+    that win_idx / dual-averaging stats / keys / accept counts stay strictly
+    per-slot holds trivially on every round."""
     b = jnp.argmax(states.best_score)
     w = jnp.argmin(states.best_score)
 
-    def mv(leaf):
-        return leaf.at[w].set(leaf[b])
+    def copy(st: ChainState) -> ChainState:
+        def mv(leaf):
+            return leaf.at[w].set(leaf[b])
 
-    return states._replace(
-        pos=mv(states.pos), score=mv(states.score),
-        cur_idx=mv(states.cur_idx), cur_ls=mv(states.cur_ls),
-        mask_planes=mv(states.mask_planes), best_score=mv(states.best_score),
-        best_idx=mv(states.best_idx), best_pos=mv(states.best_pos))
+        return st._replace(
+            pos=mv(st.pos), score=mv(st.score),
+            cur_idx=mv(st.cur_idx), cur_ls=mv(st.cur_ls),
+            mask_planes=mv(st.mask_planes), best_score=mv(st.best_score),
+            best_idx=mv(st.best_idx), best_pos=mv(st.best_pos))
+
+    return jax.lax.cond(b == w, lambda st: st, copy, states)
 
 
 def _run_chain_rounds(states, step, iters: int, exchange_every: int,

@@ -89,12 +89,24 @@ __all__ = ["consistent_mask", "score_order_ref", "score_order_chunked",
            "score_order_delta_bitmask", "score_order_pruned",
            "score_order_pruned_delta", "delta_window", "inverse_permutation",
            "window_nodes", "splice_window", "DELTA_CROSSOVER", "NEG_INF",
+           "PAD_SET",
            "MASK_WORD_BITS", "mask_plane_count", "pack_mask_words",
            "unpack_mask_words", "build_membership_planes",
            "build_violation_planes", "planes_consistent_words",
            "update_window_planes"]
 
 DELTA_CROSSOVER = 0.5   # delta pays off while window ≤ this fraction of n
+
+# PST pad-ROW sentinel. A real parent-set row uses -1 for its unused trailing
+# slots (the empty set is all -1), which every consistency check treats as
+# vacuously satisfied. Rows appended purely to pad S to a block/shard multiple
+# must NOT inherit that meaning — a -1-padded row is indistinguishable from
+# the (always-consistent) empty set and scores as a real candidate, leaving
+# only the NEG_INF table pad between a padded rank and best_idx. Padding rows
+# with PAD_SET instead makes them STRUCTURALLY inconsistent in every path
+# (gather, bitmask, kernel): best_idx can never name a rank ≥ S no matter how
+# the table was padded.
+PAD_SET = -2
 
 
 def delta_window(n: int, window: int, crossover: float = DELTA_CROSSOVER) -> int:
@@ -136,11 +148,12 @@ def consistent_mask(pst: jnp.ndarray, node: jnp.ndarray,
                     pos: jnp.ndarray) -> jnp.ndarray:
     """(C,) bool — parent set consistent with order: all parents precede node.
 
-    pst: (C, s) candidate indices (-1 pad); node: scalar; pos: (n,).
+    pst: (C, s) candidate indices (-1 = empty slot, PAD_SET = pad row —
+    structurally inconsistent); node: scalar; pos: (n,).
     """
     pnode = pst + (pst >= node)                       # (C, s) node ids
     ppos = pos[jnp.clip(pnode, 0)]                    # (C, s)
-    ok = jnp.where(pst < 0, True, ppos < pos[node])
+    ok = jnp.where(pst < 0, pst > PAD_SET, ppos < pos[node])
     return jnp.all(ok, axis=-1)
 
 
@@ -260,7 +273,7 @@ def _score_nodes_blocked(rows: jnp.ndarray, node_ids: jnp.ndarray,
 
         def per_node(i, row):
             ppos = jnp.where(psl >= i, ppos_hi, ppos_lo)
-            ok = jnp.where(psl < 0, True, ppos < pos[i])
+            ok = jnp.where(psl < 0, psl > PAD_SET, ppos < pos[i])
             masked = jnp.where(jnp.all(ok, axis=-1), row, NEG_INF)
             a = jnp.argmax(masked)
             return masked[a], a
@@ -377,8 +390,11 @@ def build_violation_planes(pst: jnp.ndarray, pos: jnp.ndarray) -> jnp.ndarray:
     def per_node(i):
         pnode = pst + (pst >= i)
         ppos = pos[jnp.clip(pnode, 0)]
-        viol = jnp.sum((pst >= 0) & (ppos >= pos[i]), axis=-1,
-                       dtype=jnp.int32)                        # (S,)
+        # PAD_SET entries count as permanent violations: pad rows carry count
+        # s forever (membership planes never touch them), so padded ranks are
+        # structurally inconsistent in the bitmask path too
+        viol = jnp.sum(((pst >= 0) & (ppos >= pos[i])) | (pst <= PAD_SET),
+                       axis=-1, dtype=jnp.int32)               # (S,)
         planes = [pack_mask_words((viol >> p) & 1) for p in range(P)]
         return jnp.stack(planes)                               # (P, S/32)
 

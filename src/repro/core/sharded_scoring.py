@@ -15,7 +15,34 @@ the chunked oracle), then:
 MCMC chains ride the ``data``/``pod`` axes unchanged (independent chains =
 pure DP), so the whole sampler is one shard_map program on the production
 mesh — scoring is TP, chains are DP, and the only cross-device traffic per
-iteration is the (n,)-vector pmax/pmin pair.
+iteration is the (n,)-vector pmax/pmin pair — or (window,) on the delta path.
+
+Sharded consistency planes (the mesh-native bitmask engine)
+-----------------------------------------------------------
+
+The bitmask-cached delta engine (core/order_scoring §Cached consistency
+bitmasks) is S-sharded right along with the table: each device holds its own
+``(n, P, shard/32)`` slice of ``ChainState.mask_planes`` (word j of the local
+slice covers GLOBAL PST ranks [32·(my·shard/32 + j), …] — the word axis is
+just the rank axis divided by 32, so the table's shard boundaries are plane
+word boundaries as long as the shard size is a multiple of 32, which
+:func:`_shard_block` guarantees). Everything about the cache is
+device-local:
+
+* **build** — :func:`make_sharded_planes_fn` runs ``build_violation_planes``
+  per shard inside the shard_map region (init / checkpoint restore), each
+  device packing only its own S-shard's words;
+* **patch** — ``update_window_planes`` runs on the local words (membership
+  planes are sharded ``P(None, model)`` like the table, candidate axis
+  replicated);
+* **score** — the masked max+argmax folds over the local words
+  (``_score_nodes_blocked_bitmask`` here, the fused plane-patch + masked
+  argmax Pallas kernel ``order_score_window_bitmask_fused_pallas`` on TPU),
+  and only then does the usual (w,) pmax/pmin pair cross ICI.
+
+The planes themselves NEVER cross ICI: the per-iteration collective payload
+of the bitmask delta path is identical to the plain delta path's — two
+(window,) vectors per chain.
 """
 from __future__ import annotations
 
@@ -25,24 +52,41 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from .order_scoring import (NEG_INF, _score_nodes_blocked, consistent_mask,
-                            delta_window, score_order_blocked,
-                            score_order_chunked, splice_window, window_nodes)
+from .mcmc import BitmaskDelta
+from .order_scoring import (MASK_WORD_BITS, NEG_INF, PAD_SET,
+                            _score_nodes_blocked,
+                            _score_nodes_blocked_bitmask,
+                            build_membership_planes, build_violation_planes,
+                            delta_window, planes_consistent_words,
+                            score_order_blocked, score_order_chunked,
+                            splice_window, update_window_planes, window_nodes)
 
 __all__ = ["score_order_sharded", "make_sharded_score_fn",
-           "make_sharded_delta_fn", "pad_table", "sharded_chain_step"]
+           "make_sharded_delta_fn", "make_sharded_bitmask_fns",
+           "make_sharded_planes_fn", "pad_table", "sharded_chain_step"]
 
 INT_MAX = jnp.int32(2**31 - 1)
 
 
 def pad_table(table, pst, mult: int):
-    """Pad S to a multiple of `mult` (device count × block)."""
+    """Pad S to a multiple of `mult` (device count × block). Scores pad with
+    NEG_INF; PST rows pad with the PAD_SET sentinel (-2), which every
+    consistency path treats as structurally inconsistent — a padded rank can
+    never reach best_idx, independent of the table pad value."""
     S = table.shape[1]
     pad = (-S) % mult
     if pad:
         table = jnp.pad(table, ((0, 0), (0, pad)), constant_values=NEG_INF)
-        pst = jnp.pad(pst, ((0, pad), (0, 0)), constant_values=-1)
+        pst = jnp.pad(pst, ((0, pad), (0, 0)), constant_values=PAD_SET)
     return table, pst
+
+
+def _shard_block(S: int, tp: int, block: int) -> int:
+    """Shared block rounding for every sharded maker: bounded by the shard
+    size, floored at one packed word (32 ranks) and rounded up to the word
+    multiple so the packed consistency-mask layout tiles the shard exactly."""
+    block = min(block, max((S + tp - 1) // tp, MASK_WORD_BITS))
+    return block + (-block) % MASK_WORD_BITS
 
 
 def _local_score(table_l, pst_l, pos, offset, block: int,
@@ -87,6 +131,15 @@ def score_order_sharded(table, pst, pos, mesh, *, axis: str = "model",
     return go(table, pst, pos)
 
 
+def _pmax_pmin(ls_l, idx_l, axis: str):
+    """The Fig. 7 level-2 reduction: global max + deterministic index
+    resolution (smallest global rank among the tied shards)."""
+    ls_g = jax.lax.pmax(ls_l, axis)
+    cand = jnp.where(ls_l >= ls_g, idx_l, INT_MAX)
+    idx_g = jax.lax.pmin(cand, axis)
+    return ls_g, idx_g
+
+
 def _local_delta(table_l, pst_l, pos, lo, offset, *, window: int, block: int,
                  axis: str):
     """Device-local window rescore + the same pmax/pmin reduction, but on
@@ -95,15 +148,80 @@ def _local_delta(table_l, pst_l, pos, lo, offset, *, window: int, block: int,
     win = window_nodes(pos, lo, window)
     ls_l, idx_l = _score_nodes_blocked(table_l[win], win, pst_l, pos,
                                        block=min(block, table_l.shape[1]))
-    idx_l = idx_l + offset
-    ls_g = jax.lax.pmax(ls_l, axis)                       # Fig. 7, level 2
-    cand = jnp.where(ls_l >= ls_g, idx_l, INT_MAX)
-    idx_g = jax.lax.pmin(cand, axis)                      # id resolution
+    ls_g, idx_g = _pmax_pmin(ls_l, idx_l + offset, axis)
     return win, ls_g, idx_g
 
 
-def sharded_chain_step(states, table, pst, mesh, *, axis: str = "model",
-                       block: int = 4096, window: int = 0):
+def _local_bitmask_delta(table_l, cm_l, pos, lo, offset, pos_old, planes_l, *,
+                         window: int, block: int, axis: str,
+                         use_kernel: bool = False,
+                         interpret: bool | None = None):
+    """Device-local bitmask-cached window rescore: patch the local plane
+    words, fold the masked max over the local shard, reduce the (w,) pair
+    over ICI. planes_l: (n, P, shard/32) — this device's slice of the chain's
+    cached violation planes; the patched slice is returned for adoption on
+    accept and never leaves the device.
+
+    use_kernel=True routes patch+score through the ONE fused Pallas kernel
+    (order_score_window_bitmask_fused_pallas); the default runs the same
+    word ops in XLA (`update_window_planes` + `_score_nodes_blocked_bitmask`)
+    — bitwise-identical by construction."""
+    win = window_nodes(pos, lo, window)
+    rows = table_l[win]
+    planes_win = planes_l[win]
+    if use_kernel:
+        from ..kernels.order_score.kernel import \
+            order_score_window_bitmask_fused_pallas
+
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        n_cand = cm_l.shape[0]
+        cm_lo = cm_l[jnp.clip(win, 0, n_cand - 1)]
+        cm_hi = cm_l[jnp.clip(win - 1, 0, n_cand - 1)]
+        ls_l, idx_l, new_win = order_score_window_bitmask_fused_pallas(
+            rows, win, pos_old, pos, planes_win, cm_lo, cm_hi,
+            block_s=min(block, rows.shape[1]), interpret=interpret)
+    else:
+        new_win = update_window_planes(cm_l, pos_old, pos, win, planes_win)
+        words = planes_consistent_words(new_win)
+        ls_l, idx_l = _score_nodes_blocked_bitmask(
+            rows, words, block=min(block, rows.shape[1]))
+    ls_g, idx_g = _pmax_pmin(ls_l, idx_l + offset, axis)
+    return win, ls_g, idx_g, planes_l.at[win].set(new_win)
+
+
+def make_sharded_planes_fn(pst, mesh, *, axis: str = "model",
+                           stacked: bool = True):
+    """Violation-plane builder that runs PER SHARD inside the shard_map
+    region — each device packs only its own S-shard's words, so neither the
+    build (init / checkpoint restore) nor any later patch moves plane words
+    across ICI.
+
+    pst: the PADDED (S, s) table (same padding as the scoring closures).
+    stacked=True: (C, n) chain-stacked positions -> (C, n, P, S/32) planes
+    sharded (chains over the data axes, words over `axis`); stacked=False:
+    one (n,) position -> (n, P, S/32) (init_chain's planes_fn contract)."""
+    from jax.experimental.shard_map import shard_map
+
+    dax = tuple(a for a in mesh.axis_names if a != axis)
+    pos_spec = P(dax, None) if stacked else P(None)
+    out_spec = (P(dax, None, None, axis) if stacked
+                else P(None, None, axis))
+
+    @functools.partial(shard_map, mesh=mesh,
+                       in_specs=(pos_spec, P(axis, None)),
+                       out_specs=out_spec, check_rep=False)
+    def build(pos, pst_l):
+        if stacked:
+            return jax.vmap(lambda p: build_violation_planes(pst_l, p))(pos)
+        return build_violation_planes(pst_l, pos)
+
+    return lambda pos: build(pos, pst)
+
+
+def sharded_chain_step(states, table, pst, mesh, cm=None, *,
+                       axis: str = "model", block: int = 4096,
+                       window: int = 0, use_kernel: bool = False):
     """One MCMC iteration for ALL chains on the production mesh, as a single
     shard_map program: chains are DP over the pod/data axes, the score table
     is TP over `axis`. Per iteration the cross-device traffic is the (n,)
@@ -115,11 +233,14 @@ def sharded_chain_step(states, table, pst, mesh, *, axis: str = "model",
     enables bounded-window proposals + incremental O(window·S/tp) rescoring
     per device.
 
-    The bitmask/adaptive ChainState leaves added by ISSUE 3 ride the same
-    per-chain P(data-axes) specs as every other leaf (mask_planes is the
-    zero-size placeholder here: the sharded delta path recomputes its window
-    masks per shard — S-sharding the cached planes over `axis` is the
-    natural next step, ROADMAP §perf).
+    cm (the (n-1, S/32) membership planes, padded like the table) switches
+    the delta path to the sharded bitmask engine: states.mask_planes must
+    then carry the (C, n, P, S/32) cached violation planes (seeded by
+    :func:`make_sharded_planes_fn`), S-sharded over `axis` alongside the
+    table — each device patches and scores its own plane words and only the
+    (w,) pmax/pmin pair crosses ICI. Without cm (or with the zero-size
+    placeholder in states.mask_planes) the delta path recomputes window
+    masks from per-shard position gathers.
     """
     from jax.experimental.shard_map import shard_map
 
@@ -129,25 +250,42 @@ def sharded_chain_step(states, table, pst, mesh, *, axis: str = "model",
     tp = mesh.shape[axis]
     shard = S // tp
     w = delta_window(n, window)
+    mask = cm is not None and bool(w) and states.mask_planes.ndim == 4
     dax = tuple(a for a in mesh.axis_names if a != axis)
     st_specs = jax.tree.map(lambda _: P(dax), states)
+    if mask:
+        st_specs = st_specs._replace(mask_planes=P(dax, None, None, axis))
     in_specs = (st_specs, P(None, axis), P(axis, None))
+    operands = (states, table, pst)
+    if mask:
+        in_specs += (P(None, axis),)
+        operands += (cm,)
     out_specs = st_specs
 
     @functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
                        out_specs=out_specs, check_rep=False)
-    def go(states_l, table_l, pst_l):
+    def go(states_l, table_l, pst_l, *rest):
         my = jax.lax.axis_index(axis)
 
         def score_fn(pos):
             ls_l, idx_l = _local_score(table_l, pst_l, pos, my * shard, block)
-            ls_g = jax.lax.pmax(ls_l, axis)
-            cand = jnp.where(ls_l >= ls_g, idx_l, INT_MAX)
-            idx_g = jax.lax.pmin(cand, axis)
+            ls_g, idx_g = _pmax_pmin(ls_l, idx_l, axis)
             return ls_g.sum(), idx_g, ls_g
 
         delta_fn = None
-        if w:
+        if mask:
+            cm_l = rest[0]
+
+            def bitmask_fn(pos, lo, prev_ls, prev_idx, pos_old, planes_l):
+                win, ls_g, idx_g, new_planes = _local_bitmask_delta(
+                    table_l, cm_l, pos, lo, my * shard, pos_old, planes_l,
+                    window=w, block=block, axis=axis, use_kernel=use_kernel)
+                tot, bi, bl = splice_window(prev_ls, prev_idx, win, ls_g,
+                                            idx_g)
+                return tot, bi, bl, new_planes
+
+            delta_fn = BitmaskDelta(bitmask_fn)
+        elif w:
             def delta_fn(pos, lo, prev_ls, prev_idx):
                 win, ls_g, idx_g = _local_delta(
                     table_l, pst_l, pos, lo, my * shard, window=w,
@@ -156,7 +294,7 @@ def sharded_chain_step(states, table, pst, mesh, *, axis: str = "model",
 
         return jax.vmap(lambda s: mcmc_step(s, score_fn, delta_fn, w))(states_l)
 
-    return go(states, table, pst)
+    return go(*operands)
 
 
 def make_sharded_score_fn(table, pst, mesh, *, axis: str = "model",
@@ -164,7 +302,7 @@ def make_sharded_score_fn(table, pst, mesh, *, axis: str = "model",
     """Closure with the (n,)-contract used by core.mcmc — the drop-in
     multi-device replacement for make_score_fn."""
     tp = mesh.shape[axis]
-    block = min(block, max((table.shape[1] + tp - 1) // tp, 8))
+    block = _shard_block(table.shape[1], tp, block)
     table, pst = pad_table(table, pst, tp * block)
 
     def fn(pos):
@@ -177,7 +315,9 @@ def make_sharded_delta_fn(table, pst, mesh, *, window: int,
                           axis: str = "model", block: int = 4096):
     """Delta-path companion of make_sharded_score_fn (same padding rules, so
     the two are bitwise-consistent). Returns a DeltaFn with the core.mcmc
-    contract, or None when the crossover heuristic rejects the window."""
+    contract, or None when the crossover heuristic rejects the window. This
+    is the mask-RECOMPUTE variant; :func:`make_sharded_bitmask_fns` is the
+    cached-planes engine."""
     from jax.experimental.shard_map import shard_map
 
     n = table.shape[0]
@@ -185,7 +325,7 @@ def make_sharded_delta_fn(table, pst, mesh, *, window: int,
     if not w:
         return None
     tp = mesh.shape[axis]
-    block = min(block, max((table.shape[1] + tp - 1) // tp, 8))
+    block = _shard_block(table.shape[1], tp, block)
     table, pst = pad_table(table, pst, tp * block)
     shard = table.shape[1] // tp
     in_specs = (P(None, axis), P(axis, None), P(None), P(), P(None), P(None))
@@ -202,3 +342,53 @@ def make_sharded_delta_fn(table, pst, mesh, *, window: int,
     def fn(pos, lo, prev_ls, prev_idx):
         return go(table, pst, pos, lo, prev_ls, prev_idx)
     return fn
+
+
+def make_sharded_bitmask_fns(table, pst, mesh, *, window: int,
+                             axis: str = "model", block: int = 4096,
+                             use_kernel: bool = False):
+    """(delta_fn, planes_fn) for the mesh-native bitmask engine, padded with
+    the same rules as make_sharded_score_fn so the three closures are
+    bitwise-consistent:
+
+    * delta_fn: a :class:`BitmaskDelta` with the extended per-chain contract
+      ``fn(new_pos, lo, prev_ls, prev_idx, old_pos, planes) -> (score,
+      best_idx, best_ls, new_planes)`` where planes is the chain's
+      (n, P, S/32) cache, S-sharded over `axis` — plane words stay on their
+      device; the collective payload is the (w,) pmax/pmin pair.
+    * planes_fn: (n,) pos -> freshly-built sharded planes (init_chain's
+      ``planes_fn`` contract / checkpoint-restore rebuild), built per shard
+      inside shard_map.
+
+    Returns (None, None) when the crossover heuristic rejects the window."""
+    from jax.experimental.shard_map import shard_map
+
+    n = table.shape[0]
+    w = delta_window(n, window)
+    if not w:
+        return None, None
+    tp = mesh.shape[axis]
+    block = _shard_block(table.shape[1], tp, block)
+    table, pst = pad_table(table, pst, tp * block)
+    shard = table.shape[1] // tp
+    cm = build_membership_planes(pst, n)
+    planes_fn = make_sharded_planes_fn(pst, mesh, axis=axis, stacked=False)
+
+    in_specs = (P(None, axis), P(None, axis), P(None), P(), P(None), P(None),
+                P(None), P(None, None, axis))
+    out_specs = (P(), P(None), P(None), P(None, None, axis))
+
+    @functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_rep=False)
+    def go(table_l, cm_l, pos, lo, prev_ls, prev_idx, pos_old, planes_l):
+        my = jax.lax.axis_index(axis)
+        win, ls_g, idx_g, new_planes = _local_bitmask_delta(
+            table_l, cm_l, pos, lo, my * shard, pos_old, planes_l,
+            window=w, block=block, axis=axis, use_kernel=use_kernel)
+        tot, bi, bl = splice_window(prev_ls, prev_idx, win, ls_g, idx_g)
+        return tot, bi, bl, new_planes
+
+    def fn(pos, lo, prev_ls, prev_idx, pos_old, planes):
+        return go(table, cm, pos, lo, prev_ls, prev_idx, pos_old, planes)
+
+    return BitmaskDelta(fn), planes_fn

@@ -18,6 +18,35 @@ cell 1):
   VMEM scratch, and each node then needs only an elementwise select.
 * the per-node work is a (BLK, s) compare/select + (BLK,) max — exactly the
   compare/assign-only inner loop the paper argues for (§III-B).
+
+Bitmask variants and the fused plane-patch kernel (ISSUE 4)
+-----------------------------------------------------------
+
+`_order_score_window_bitmask_kernel` consumes PACKED consistency words
+(core/order_scoring §Cached consistency bitmasks) instead of recomputing the
+mask from PST gathers. `_order_score_window_bitmask_fused_kernel` goes one
+step further and is the production bitmask path: the cached violation-plane
+words are read into VMEM, the membership/ripple-carry patch for the ≤ w
+moved window nodes is applied, the packed consistency mask derived, and the
+masked max+argmax folded — ONE kernel, one VMEM pass, with the patched words
+emitted as an output for adoption on accept. Contract:
+
+    (rows (w, S), node_ids (w,), pos_old (n,), pos_new (n,),
+     planes_win (w, P, S/32), cm_lo (w, S/32), cm_hi (w, S/32))
+        -> (best_val (w,), best_idx (w,), patched_planes (w, P, S/32))
+
+cm_lo/cm_hi are the two possible membership rows of each window node
+(candidate x vs x−1, selected per (child, parent) pair in-kernel — the same
+select-instead-of-gather trick as the position kernel). Grid (S/BLK, w):
+ALL w window rows ride one invocation, same accumulator fold and first-wins
+tie-break as every other window kernel, so the three variants are
+bitwise-interchangeable.
+
+Plane-sharding layout (core/sharded_scoring): on a mesh, the plane word
+axis is S-sharded over `model` right alongside the table — word j of a
+device's (n, P, shard/32) slice covers global ranks 32·(shard_start/32 + j)
+…, so each device patches and scores only its own words (this kernel runs
+per shard inside shard_map) and only the (w,) pmax/pmin pair crosses ICI.
 """
 from __future__ import annotations
 
@@ -27,6 +56,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from ...core.order_scoring import PAD_SET
 
 NEG_INF = -3.0e38
 
@@ -68,7 +99,7 @@ def _order_score_window_kernel(pos_ref, nid_ref, table_ref, pst_ref, val_ref,
     my_pos = jnp.sum(jnp.where(jnp.arange(n) == nid, pos, 0))
 
     ppos = jnp.where(pst >= nid, hi_ref[...], lo_ref[...])
-    ok = jnp.where(pst < 0, True, ppos < my_pos)
+    ok = jnp.where(pst < 0, pst > PAD_SET, ppos < my_pos)  # pad row sentinel
     consistent = jnp.all(ok, axis=-1)
 
     masked = jnp.where(consistent, scores, NEG_INF)
@@ -198,6 +229,143 @@ def order_score_window_bitmask_pallas(rows: jnp.ndarray,
         interpret=interpret,
     )(mask_words, rows)
     return val[:, 0], idx[:, 0]
+
+
+def _order_score_window_bitmask_fused_kernel(
+        pos_old_ref, pos_new_ref, nid_ref, planes_ref, cmlo_ref, cmhi_ref,
+        table_ref, val_ref, idx_ref, new_planes_ref, *, block_s: int, n: int,
+        w: int, n_planes: int):
+    """ONE kernel for the whole bitmask-cached proposal rescore: read the
+    OLD violation-plane words, apply the membership/ripple-carry patch for
+    the ≤ w moved window nodes, derive the packed consistency mask, and fold
+    the masked max+argmax — all in the same VMEM pass over the (BLK) tile.
+    The patched words are emitted as a third output so the sampler can adopt
+    them on accept. Replaces the XLA word-op patch (`update_window_planes`)
+    + separate scoring kernel (`_order_score_window_bitmask_kernel`) pair:
+    the plane words are read ONCE instead of written to HBM and re-read.
+
+    Per grid cell (b, i): slot i's (P, BLK/32) plane tile for block b is
+    patched against the other w slots' membership rows (cmlo/cmhi are the
+    candidate rows for x < i / x > i — the same select-instead-of-gather
+    trick as the position kernel, one select per (i, x) pair), then scored.
+    Same grid walk, accumulator fold and first-wins tie-break as the other
+    window kernels, so all three are bitwise-interchangeable."""
+    b = pl.program_id(0)          # parent-set block (outer)
+    i = pl.program_id(1)          # window slot (inner)
+
+    @pl.when(jnp.logical_and(b == 0, i == 0))
+    def _init():
+        val_ref[...] = jnp.full(val_ref.shape, NEG_INF, val_ref.dtype)
+        idx_ref[...] = jnp.zeros(idx_ref.shape, idx_ref.dtype)
+
+    nid = nid_ref[...]                            # (w,)
+    pos_old = pos_old_ref[...]                    # (n,)
+    pos_new = pos_new_ref[...]                    # (n,)
+    nid_i = jnp.sum(jnp.where(jnp.arange(w) == i, nid, 0))
+    po_i = jnp.sum(jnp.where(jnp.arange(n) == nid_i, pos_old, 0))
+    pn_i = jnp.sum(jnp.where(jnp.arange(n) == nid_i, pos_new, 0))
+
+    planes = planes_ref[0]                        # (P, BLK/32) uint32
+    for x in range(w):                            # static unroll: w is small
+        nx = nid[x]
+        po_x = jnp.sum(jnp.where(jnp.arange(n) == nx, pos_old, 0))
+        pn_x = jnp.sum(jnp.where(jnp.arange(n) == nx, pos_new, 0))
+        was = po_x > po_i
+        now = pn_x > pn_i
+        # candidate row of x as seen by child i: cm[x - (x > i)] — both
+        # gathers were done once outside; select per (i, x) pair here
+        row = jnp.where(nx > nid_i, cmhi_ref[x, :], cmlo_ref[x, :])
+        zero = jnp.zeros_like(row)
+        add = jnp.where(now & jnp.logical_not(was), row, zero)
+        sub = jnp.where(was & jnp.logical_not(now), row, zero)
+        out, carry = [], add                      # ripple-carry +1
+        for p in range(n_planes):
+            v = planes[p]
+            out.append(v ^ carry)
+            carry = v & carry
+        planes = jnp.stack(out)
+        out, borrow = [], sub                     # ripple-borrow -1
+        for p in range(n_planes):
+            v = planes[p]
+            out.append(v ^ borrow)
+            borrow = (~v) & borrow
+        planes = jnp.stack(out)
+    new_planes_ref[0] = planes
+
+    acc = planes[0]                               # violation-count != 0 OR
+    for p in range(1, n_planes):
+        acc = acc | planes[p]
+    words = ~acc
+    bw = block_s // 32
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (bw, 32), 1)
+    bits = jnp.right_shift(words[:, None], shifts) & jnp.uint32(1)
+    consistent = (bits != 0).reshape(block_s)     # LSB-first, rank 32j+b
+
+    scores = table_ref[0, :]                      # (BLK,)
+    masked = jnp.where(consistent, scores, NEG_INF)
+    larg = jnp.argmax(masked).astype(jnp.int32)
+    lmax = jnp.max(masked)
+
+    _Z = jnp.int32(0)
+    cur = pl.load(val_ref, (i, _Z))
+    better = lmax > cur
+    pl.store(val_ref, (i, _Z), jnp.where(better, lmax, cur))
+    pl.store(idx_ref, (i, _Z),
+             jnp.where(better, larg + b * block_s, pl.load(idx_ref, (i, _Z))))
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def order_score_window_bitmask_fused_pallas(
+        rows: jnp.ndarray, node_ids: jnp.ndarray, pos_old: jnp.ndarray,
+        pos_new: jnp.ndarray, planes_win: jnp.ndarray, cm_lo: jnp.ndarray,
+        cm_hi: jnp.ndarray, *, block_s: int = 2048,
+        interpret: bool = False):
+    """Fused plane-patch + masked-argmax (see the fused kernel docstring).
+
+    rows: (w, S) gathered table rows for the window nodes; node_ids: (w,);
+    pos_old/pos_new: (n,) previous/proposed orders; planes_win: (w, P, S/32)
+    the CACHED plane rows under pos_old; cm_lo/cm_hi: (w, S/32) membership
+    rows cm[clip(node)] / cm[clip(node-1)] (the two possible candidate rows
+    of each window node). Returns (best_val (w,), best_idx (w,),
+    patched_planes (w, P, S/32)). S must be a multiple of block_s, block_s a
+    multiple of 32. Grid (S/BLK, w): ALL w window rows ride one kernel
+    invocation, exactly like the gather-window kernel."""
+    w, S = rows.shape
+    n = pos_old.shape[0]
+    n_planes, W = planes_win.shape[1], planes_win.shape[2]
+    assert S % block_s == 0, "pad S to a multiple of block_s"
+    assert block_s % 32 == 0, "packed words need block_s % 32 == 0"
+    assert W * 32 == S, "planes words must cover S"
+    bw = block_s // 32
+    grid = (S // block_s, w)
+
+    kernel = functools.partial(_order_score_window_bitmask_fused_kernel,
+                               block_s=block_s, n=n, w=w, n_planes=n_planes)
+    val, idx, new_planes = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n,), lambda b, i: (0,)),              # pos_old
+            pl.BlockSpec((n,), lambda b, i: (0,)),              # pos_new
+            pl.BlockSpec((w,), lambda b, i: (0,)),              # node ids
+            pl.BlockSpec((1, n_planes, bw), lambda b, i: (i, 0, b)),  # planes
+            pl.BlockSpec((w, bw), lambda b, i: (0, b)),         # cm (x < i)
+            pl.BlockSpec((w, bw), lambda b, i: (0, b)),         # cm (x > i)
+            pl.BlockSpec((1, block_s), lambda b, i: (i, b)),    # row tile
+        ],
+        out_specs=[
+            pl.BlockSpec((w, 1), lambda b, i: (0, 0)),          # running max
+            pl.BlockSpec((w, 1), lambda b, i: (0, 0)),          # running argmax
+            pl.BlockSpec((1, n_planes, bw), lambda b, i: (i, 0, b)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((w, 1), jnp.float32),
+            jax.ShapeDtypeStruct((w, 1), jnp.int32),
+            jax.ShapeDtypeStruct((w, n_planes, W), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(pos_old, pos_new, node_ids, planes_win, cm_lo, cm_hi, rows)
+    return val[:, 0], idx[:, 0], new_planes
 
 
 @functools.partial(jax.jit, static_argnames=("block_s", "interpret"))

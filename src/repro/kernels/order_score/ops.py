@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from .kernel import (NEG_INF, order_score_pallas,
+                     order_score_window_bitmask_fused_pallas,
                      order_score_window_bitmask_pallas,
                      order_score_window_pallas)
 from .ref import order_score_ref
@@ -17,13 +18,17 @@ __all__ = ["order_score", "order_score_delta", "order_score_delta_bitmask",
 
 
 def pad_for_kernel(table: jnp.ndarray, pst: jnp.ndarray, block_s: int):
-    """Pad S to a multiple of block_s: scores with NEG_INF (never win),
-    parent sets with -1 (vacuously consistent, but unreachable)."""
+    """Pad S to a multiple of block_s: scores with NEG_INF (never win) AND
+    parent sets with the PAD_SET row sentinel (-2, structurally inconsistent
+    in every consistency check) — padded ranks can't reach best_idx even if a
+    caller pads the table with something other than NEG_INF."""
+    from ...core.order_scoring import PAD_SET
+
     S = table.shape[1]
     pad = (-S) % block_s
     if pad:
         table = jnp.pad(table, ((0, 0), (0, pad)), constant_values=NEG_INF)
-        pst = jnp.pad(pst, ((0, pad), (0, 0)), constant_values=-1)
+        pst = jnp.pad(pst, ((0, pad), (0, 0)), constant_values=PAD_SET)
     return table, pst
 
 
@@ -85,14 +90,15 @@ def order_score_delta_bitmask(table: jnp.ndarray, cm: jnp.ndarray,
                               window: int, block_s: int = 2048,
                               use_pallas: bool = True,
                               interpret: bool | None = None):
-    """Kernel-path bitmask-cached rescore: the cached violation planes are
-    patched with word ops (core/order_scoring.update_window_planes), and the
-    masked max+argmax streams the packed words + row tiles through VMEM
-    (order_score_window_bitmask_pallas) — the PST leaves the per-iteration
-    hot path entirely. table must already be padded to a block_s multiple
-    (pad_for_kernel), with cm/planes built on the padded shape. Same
-    extended contract as core's score_order_delta_bitmask:
-    (total, best_idx, best_ls, patched_planes)."""
+    """Kernel-path bitmask-cached rescore, now ONE fused Pallas kernel
+    (order_score_window_bitmask_fused_pallas): the cached violation-plane
+    words are read into VMEM once, patched with the membership/ripple-carry
+    word ops, and the masked max+argmax folds in the same pass — the XLA
+    word-op patch + separate scoring-kernel round trip through HBM is gone,
+    and the PST leaves the per-iteration hot path entirely. table must
+    already be padded to a block_s multiple (pad_for_kernel), with cm/planes
+    built on the padded shape. Same extended contract as core's
+    score_order_delta_bitmask: (total, best_idx, best_ls, patched_planes)."""
     from ...core.order_scoring import (_score_nodes_blocked_bitmask,
                                       planes_consistent_words, splice_window,
                                       update_window_planes, window_nodes)
@@ -103,14 +109,18 @@ def order_score_delta_bitmask(table: jnp.ndarray, cm: jnp.ndarray,
     assert S % block_s == 0, "pad table with pad_for_kernel first"
     w = min(window, n)
     win = window_nodes(pos, lo, w)
-    new_planes_win = update_window_planes(cm, pos_old, pos, win, planes[win])
-    words = planes_consistent_words(new_planes_win)
     rows = table[win]
     if use_pallas:
-        val, idx = order_score_window_bitmask_pallas(rows, words,
-                                                     block_s=block_s,
-                                                     interpret=interpret)
+        n_cand = cm.shape[0]
+        cm_lo = cm[jnp.clip(win, 0, n_cand - 1)]        # row when x < i
+        cm_hi = cm[jnp.clip(win - 1, 0, n_cand - 1)]    # row when x > i
+        val, idx, new_planes_win = order_score_window_bitmask_fused_pallas(
+            rows, win, pos_old, pos, planes[win], cm_lo, cm_hi,
+            block_s=block_s, interpret=interpret)
     else:
+        new_planes_win = update_window_planes(cm, pos_old, pos, win,
+                                              planes[win])
+        words = planes_consistent_words(new_planes_win)
         val, idx = _score_nodes_blocked_bitmask(rows, words,
                                                 block=min(block_s, S))
     tot, best_idx, best_ls = splice_window(prev_ls, prev_idx, win, val, idx)

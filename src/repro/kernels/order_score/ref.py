@@ -4,6 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ...core.order_scoring import PAD_SET
 from .kernel import NEG_INF
 
 
@@ -14,7 +15,7 @@ def order_score_ref(table: jnp.ndarray, pst: jnp.ndarray, pos: jnp.ndarray):
     def per_node(i, row):
         pnode = pst + (pst >= i).astype(jnp.int32)
         ppos = pos[jnp.clip(pnode, 0)]
-        ok = jnp.where(pst < 0, True, ppos < pos[i])
+        ok = jnp.where(pst < 0, pst > PAD_SET, ppos < pos[i])  # pad row
         masked = jnp.where(jnp.all(ok, axis=-1), row, NEG_INF)
         a = jnp.argmax(masked)
         return masked[a], a.astype(jnp.int32)

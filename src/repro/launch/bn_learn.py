@@ -58,7 +58,8 @@ from ..data.networks import (alarm_adjacency, stn_adjacency,
 from ..preprocess import SparseScoreTable, build_score_table_fused
 
 __all__ = ["LearnConfig", "learn_structure", "make_score_fn",
-           "make_delta_fn", "adaptive_window_set", "main"]
+           "make_delta_fn", "adaptive_window_set", "reconcile_mask_planes",
+           "main"]
 
 
 @dataclass
@@ -83,6 +84,10 @@ class LearnConfig:
                                   # end-only reduction)
     checkpoint_every: int = 0     # 0 = off
     checkpoint_dir: str = ""
+    sharded: bool = False         # run the MCMC on the sharded mesh path:
+                                  # chains DP over 'data', score table +
+                                  # cached consistency planes TP over 'model'
+    sharded_tp: int = 0           # model-axis extent (0 = all devices)
     preprocess: str = "reference"  # "reference" (core/scores host loop) |
                                    # "fused" (preprocess/ pipeline)
     prune_delta: float = 0.0      # > 0: hash-compress the table, keeping per
@@ -227,6 +232,117 @@ def make_delta_fn(st, cfg: LearnConfig):
     return w, _delta_for_window(ctx, w), ctx[3]
 
 
+def reconcile_mask_planes(states: ChainState, planes_fn) -> ChainState:
+    """Checkpoint interop across engine variants (ISSUE 4 bugfix): the
+    ``mask_planes`` leaf is a DERIVED cache, and snapshots written by
+    different engines disagree about its shape — sharded runs snapshot the
+    zero-size placeholder, single-device bitmask runs may carry full
+    (n, P, S/32) planes built under another padding, and pre-bitmask layouts
+    have no leaf at all (backfilled by the checkpointer's ``allow_missing``,
+    which covers MISSING leaves only, never wrong-shaped ones). Instead of
+    letting a wrong-shaped restored leaf shape-mismatch the first jitted
+    step, ALWAYS rebuild the cache from the restored positions when this
+    engine uses it (``planes_fn``: stacked (C, n) pos -> (C, n, P, W)
+    planes), and reset it to the placeholder when it doesn't."""
+    if planes_fn is not None:
+        return states._replace(mask_planes=planes_fn(states.pos))
+    return states._replace(
+        mask_planes=jnp.zeros((states.pos.shape[0], 0), jnp.uint32))
+
+
+def _run_sharded(st, cfg: LearnConfig, key, n: int):
+    """The production-mesh MCMC path (--sharded): every iteration is ONE
+    shard_map program (core/sharded_scoring.sharded_chain_step) — chains DP
+    over 'data', score table + cached consistency planes TP over 'model';
+    per iteration only the (window,) pmax/pmin pair crosses ICI. Returns
+    (best_score, best_idx, accepts, delta_window, mask_on)."""
+    from ..core.sharded_scoring import (_shard_block, make_sharded_planes_fn,
+                                        pad_table, score_order_sharded,
+                                        sharded_chain_step)
+    from ..runtime.jax_compat import make_auto_mesh, mesh_context
+
+    if isinstance(st, SparseScoreTable):
+        raise ValueError(
+            "--sharded needs the dense (n, S) table: the pruned "
+            "representation is already O(n*K) per device (drop --prune-delta)")
+    if cfg.scorer == "sum":
+        raise ValueError("--sharded supports the max scorer (paper Eq. 6) "
+                         "only")
+    if cfg.adapt_window:
+        raise ValueError("--sharded does not compose with --adapt-window "
+                         "yet: per-window delta closures would each need "
+                         "their own shard_map branch")
+    ndev = jax.device_count()
+    tp = cfg.sharded_tp or ndev
+    if ndev % tp:
+        raise ValueError(f"--sharded-tp {tp} does not divide the "
+                         f"{ndev}-device platform")
+    dp = ndev // tp
+    if cfg.chains % dp:
+        raise ValueError(f"--chains {cfg.chains} must be divisible by the "
+                         f"data-axis extent {dp}")
+    mesh = make_auto_mesh((dp, tp), ("data", "model"))
+    block = _shard_block(st.table.shape[1], tp, cfg.block)
+    table, pst = pad_table(st.table, st.pst, tp * block)
+    w = delta_window(n, cfg.window)
+    mask_on = bool(w) and cfg.mask_cache
+    cm = build_membership_planes(pst, n) if mask_on else None
+    splanes_fn = (make_sharded_planes_fn(pst, mesh, stacked=True)
+                  if mask_on else None)
+
+    def score_fn(pos):
+        return score_order_sharded(table, pst, pos, mesh, block=block)
+
+    exch = cfg.exchange_every if cfg.chains > 1 else 0
+
+    @functools.partial(jax.jit, static_argnames=("length",))
+    def run_segment(states, start, *, length):
+        def body(stt, i):
+            stt = sharded_chain_step(stt, table, pst, mesh, cm, block=block,
+                                     window=cfg.window,
+                                     use_kernel=cfg.use_kernel)
+            if exch:
+                stt = jax.lax.cond((start + i + 1) % exch == 0,
+                                   exchange_step, lambda x: x, stt)
+            return stt, None
+        states, _ = jax.lax.scan(body, states, jnp.arange(length))
+        return states
+
+    checkpointed = bool(cfg.checkpoint_every and cfg.checkpoint_dir)
+    with mesh_context(mesh):
+        keys = jax.random.split(key, cfg.chains)
+        states = jax.vmap(lambda k: init_chain(k, n, score_fn))(keys)
+        if mask_on:
+            # per-shard plane build: each device packs its own S-shard words
+            states = states._replace(mask_planes=splanes_fn(states.pos))
+        if not checkpointed:
+            states = run_segment(states, jnp.int32(0), length=cfg.iters)
+        else:
+            seg = cfg.checkpoint_every
+            dummy = jnp.zeros((cfg.chains, 0), jnp.uint32)
+            pack = lambda s: jax.tree.map(
+                np.asarray, s._replace(key=jax.random.key_data(s.key),
+                                       mask_planes=dummy))
+            unpack = lambda t: ChainState(*t)._replace(
+                key=jax.random.wrap_key_data(jnp.asarray(t[0])))
+            done = latest_step(cfg.checkpoint_dir)
+            if done is not None:
+                restored, _ = restore_checkpoint(cfg.checkpoint_dir,
+                                                 tuple(pack(states)),
+                                                 step=done, allow_missing=True)
+                states = unpack(jax.tree.map(jnp.asarray, tuple(restored)))
+                states = reconcile_mask_planes(states, splanes_fn)
+            else:
+                done = 0
+            while done < cfg.iters:
+                states = run_segment(states, jnp.int32(done), length=seg)
+                done += seg
+                save_checkpoint(cfg.checkpoint_dir, done, tuple(pack(states)))
+        jax.block_until_ready(states.best_score)
+        best_score, best_idx, _ = exchange_best(states)
+    return best_score, best_idx, states.accepts.sum(), w, mask_on
+
+
 def learn_structure(data: np.ndarray, cfg: LearnConfig, *,
                     prior_matrix: np.ndarray | None = None) -> dict:
     """Full pipeline. Returns {adjacency, score, preprocess_s, iteration_s,
@@ -248,8 +364,32 @@ def learn_structure(data: np.ndarray, cfg: LearnConfig, *,
                           else st.table)
     t_pre = time.time() - t0
 
-    score_fn = make_score_fn(st, cfg)
     key = jax.random.key(cfg.seed)
+
+    if cfg.sharded:
+        t0 = time.time()
+        best_score, best_idx, accepts, window, mask_on = _run_sharded(
+            st, cfg, key, n)
+        t_iter = time.time() - t0
+        adj = adjacency_from_ranks(np.asarray(best_idx), s=cfg.s)
+        total_prop = cfg.iters * max(cfg.chains, 1)
+        return {
+            "adjacency": adj,
+            "delta_window": window,
+            "adaptive_windows": [],
+            "mask_cache": mask_on,
+            "sharded": True,
+            "exchange_every": cfg.exchange_every,
+            "score": float(best_score),
+            "preprocess_s": t_pre,
+            "preprocess_cache_hit": cache_hit,
+            "iteration_s": t_iter,
+            "per_iteration_s": t_iter / max(cfg.iters, 1),
+            "accept_rate": float(accepts) / max(total_prop, 1),
+            "S": st.S,
+        }
+
+    score_fn = make_score_fn(st, cfg)
 
     checkpointed = bool(cfg.checkpoint_every and cfg.checkpoint_dir)
     adaptive_ws: tuple[int, ...] = ()
@@ -321,9 +461,11 @@ def learn_structure(data: np.ndarray, cfg: LearnConfig, *,
                                              tuple(pack(states)), step=done,
                                              allow_missing=True)
             states = unpack(jax.tree.map(jnp.asarray, tuple(restored)))
-            if planes_fn is not None:
-                states = states._replace(
-                    mask_planes=jax.vmap(planes_fn)(states.pos))
+            # derived-cache interop: rebuild or reset the planes leaf no
+            # matter which engine variant wrote the snapshot
+            states = reconcile_mask_planes(
+                states, (jax.vmap(planes_fn) if planes_fn is not None
+                         else None))
         else:
             done = 0
 
@@ -362,6 +504,7 @@ def learn_structure(data: np.ndarray, cfg: LearnConfig, *,
         "adaptive_windows": list(adaptive_ws),
         "mask_cache": isinstance(delta_fn, BitmaskDelta) or
                       (cfg.adapt_window and planes_fn is not None),
+        "sharded": False,
         "exchange_every": cfg.exchange_every,
         "score": float(best_score),
         "preprocess_s": t_pre,
@@ -411,6 +554,14 @@ def main(argv=None) -> dict:
     ap.add_argument("--burn-in", type=int, default=0,
                     help="adaptation horizon for --adapt-window "
                          "(0 = iters // 5)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="run MCMC on the production-mesh path: chains DP "
+                         "over 'data', score table + cached consistency "
+                         "planes TP over 'model' (one shard_map program per "
+                         "iteration)")
+    ap.add_argument("--sharded-tp", type=int, default=0,
+                    help="model-axis extent for --sharded "
+                         "(0 = all visible devices)")
     ap.add_argument("--exchange-every", type=int, default=0,
                     help="> 0: in-scan cross-chain exchange period — the "
                          "best chain re-seeds the worst every this many "
@@ -452,6 +603,7 @@ def main(argv=None) -> dict:
                       use_kernel=args.use_kernel, window=args.window,
                       mask_cache=not args.no_mask_cache,
                       adapt_window=args.adapt_window, burn_in=args.burn_in,
+                      sharded=args.sharded, sharded_tp=args.sharded_tp,
                       exchange_every=args.exchange_every,
                       preprocess=args.preprocess,
                       prune_delta=args.prune_delta,
@@ -470,6 +622,8 @@ def main(argv=None) -> dict:
         mode = "full"
     if out["mask_cache"]:
         mode += "+bitmask"
+    if out.get("sharded"):
+        mode += f"+sharded({jax.device_count()}dev)"
     if out["exchange_every"]:
         mode += f"+exch({out['exchange_every']})"
     pre = f"pre={out['preprocess_s']:.2f}s"

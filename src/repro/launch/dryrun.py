@@ -168,15 +168,20 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
 
 def run_bn_cell(multi_pod: bool, *, n: int = 60, s: int = 4,
-                block: int = 4096) -> dict:
+                block: int = 4096, window: int = 8) -> dict:
     """The paper's own workload on the production mesh: one MCMC iteration
-    for all chains (DP over pod/data) with the (n, S) score table sharded
-    over `model` (TP) — launch/bn_learn at scale."""
+    for all chains (DP over pod/data) with the (n, S) score table AND the
+    cached consistency bit planes sharded over `model` (TP) —
+    launch/bn_learn --sharded at scale. The compiled program is the
+    mesh-native bitmask delta engine: each device patches and scores its own
+    (n, P, shard/32) plane words; only the (window,) pmax/pmin pair crosses
+    ICI per iteration."""
     import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     from ..core.combinatorics import n_parent_sets
     from ..core.mcmc import ChainState
+    from ..core.order_scoring import mask_plane_count
     from ..core.sharded_scoring import sharded_chain_step
 
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -186,6 +191,8 @@ def run_bn_cell(multi_pod: bool, *, n: int = 60, s: int = 4,
     S = n_parent_sets(n - 1, s)
     S_pad = S + (-S) % (tp * block)
     C = chips // tp                      # one chain per data-axis slot
+    Pn = mask_plane_count(s)
+    W = S_pad // 32
 
     dax = tuple(a for a in mesh.axis_names if a != "model")
     key = jax.random.key(0)
@@ -199,24 +206,29 @@ def run_bn_cell(multi_pod: bool, *, n: int = 60, s: int = 4,
         best_idx=jax.ShapeDtypeStruct((C, n), jnp.int32),
         best_pos=jax.ShapeDtypeStruct((C, n), jnp.int32),
         accepts=jax.ShapeDtypeStruct((C,), jnp.int32),
-        # bitmask cache placeholder (the sharded path recomputes window
-        # masks per shard — ROADMAP: shard the planes over `model` next)
-        mask_planes=jax.ShapeDtypeStruct((C, 0), jnp.uint32),
+        # S-sharded cached consistency planes (ISSUE 4): plane words live
+        # with their table shard and never cross ICI
+        mask_planes=jax.ShapeDtypeStruct((C, n, Pn, W), jnp.uint32),
         win_idx=jax.ShapeDtypeStruct((C,), jnp.int32),
         adapt_err=jax.ShapeDtypeStruct((C,), jnp.float32),
         step=jax.ShapeDtypeStruct((C,), jnp.int32))
     table = jax.ShapeDtypeStruct((n, S_pad), jnp.float32)
     pst = jax.ShapeDtypeStruct((S_pad, s), jnp.int32)
+    cm = jax.ShapeDtypeStruct((n - 1, W), jnp.uint32)
 
     sh = lambda spec: NamedSharding(mesh, spec)
-    st_sh = jax.tree.map(lambda _: sh(P(dax)), states)
-    step = functools.partial(sharded_chain_step, mesh=mesh, block=block)
+    st_sh = jax.tree.map(lambda _: sh(P(dax)), states)._replace(
+        mask_planes=sh(P(dax, None, None, "model")))
+    def step(states, table, pst, cm):
+        return sharded_chain_step(states, table, pst, mesh, cm, block=block,
+                                  window=window)
 
     t0 = time.time()
     with mesh_context(mesh):
         lowered = jax.jit(step, in_shardings=(
-            st_sh, sh(P(None, "model")), sh(P("model", None)))) \
-            .lower(states, table, pst)
+            st_sh, sh(P(None, "model")), sh(P("model", None)),
+            sh(P(None, "model")))) \
+            .lower(states, table, pst, cm)
         t_lower = time.time() - t0
         t0 = time.time()
         compiled = lowered.compile()
@@ -233,7 +245,8 @@ def run_bn_cell(multi_pod: bool, *, n: int = 60, s: int = 4,
         peak_memory=float(getattr(mem, "peak_memory_in_bytes", 0) or 0))
     record = rep.as_dict()
     record.update({"ok": True, "mode": "bn_score", "chains": C,
-                   "S": S, "S_pad": S_pad, "block": block,
+                   "S": S, "S_pad": S_pad, "block": block, "window": window,
+                   "mask_planes": [Pn, W],
                    "t_lower_s": t_lower, "t_compile_s": t_compile,
                    "loops": [list(t) for t in hc.loops],
                    "unknown_loops": hc.unknown_loops})

@@ -142,8 +142,63 @@ def test_kernel_bitmask_variant_matches_core(padded_random_table):
                                           np.asarray(want[1]))
             np.testing.assert_array_equal(np.asarray(got[2]),
                                           np.asarray(want[2]))
+            # the fused kernel's patched plane words == from-scratch build
+            np.testing.assert_array_equal(
+                np.asarray(got[3]),
+                np.asarray(build_violation_planes(pst, new_pos)))
         pos, planes = new_pos, got[3]
         idx, ls = want[1], want[2]
+
+
+# ------------------------------------------------- structural PST padding
+def test_padded_pst_rows_are_structurally_inconsistent():
+    """ISSUE 4 bugfix: pad_table/pad_for_kernel pad PST rows with the
+    PAD_SET sentinel (-2), which every consistency path rejects — padded
+    ranks can never reach best_idx even when the TABLE pad is 0.0 (which
+    beats every real score here), where the old -1 pad (indistinguishable
+    from the always-consistent empty set) handed best_idx to a padded
+    rank."""
+    from repro.core.order_scoring import PAD_SET, score_order_chunked
+    from repro.core.sharded_scoring import pad_table
+    from repro.kernels.order_score import order_score, pad_for_kernel
+
+    from repro.core.combinatorics import build_pst, n_parent_sets
+
+    n, s, block = 13, 3, 64
+    S = n_parent_sets(n - 1, s)
+    assert S % block != 0, "want a ragged pad for this test"
+    pst, _ = build_pst(n - 1, s)
+    rng = np.random.default_rng(3)
+    table = jnp.asarray(rng.normal(-40, 8, (n, S)).astype(np.float32))
+    tpad, ppad = pad_table(table, jnp.asarray(pst), block)
+    assert int(np.asarray(ppad)[S:].max(initial=PAD_SET)) == PAD_SET
+    _, ppad_k = pad_for_kernel(table, jnp.asarray(pst), block)
+    np.testing.assert_array_equal(np.asarray(ppad), np.asarray(ppad_k))
+    # adversarial table pad: 0.0 beats every real entry
+    tzero = jnp.pad(table, ((0, 0), (0, tpad.shape[1] - S)),
+                    constant_values=0.0)
+    pos = jnp.asarray(rng.permutation(n).astype(np.int32))
+    for i in range(n):
+        m = np.asarray(consistent_mask(ppad, jnp.int32(i), pos))
+        assert not m[S:].any()
+    planes = build_violation_planes(ppad, pos)
+    for i in range(n):
+        bits = np.asarray(unpack_mask_words(
+            planes_consistent_words(planes[i])))
+        assert not bits[S:].any()
+    for scorer in (score_order_blocked, score_order_chunked):
+        _, idx, _ = scorer(tzero, ppad, pos, block=block)
+        assert int(np.max(np.asarray(idx))) < S, scorer.__name__
+    _, idx, _ = order_score(tzero, ppad, pos, block_s=block, interpret=True)
+    assert int(np.max(np.asarray(idx))) < S
+    # bitmask delta on the adversarially-padded table also stays < S
+    cm = build_membership_planes(ppad, n)
+    _, idx0, ls0 = score_order_blocked(tzero, ppad, pos, block=block)
+    new_pos, lo = propose_move(jax.random.key(0), pos, window=4)
+    tot, gidx, _, _ = score_order_delta_bitmask(
+        tzero, cm, new_pos, ls0, idx0, lo, pos, planes, window=4,
+        block=block)
+    assert int(np.max(np.asarray(gidx))) < S
 
 
 # ------------------------------------------------- in-scan exchange_best
@@ -222,6 +277,82 @@ def test_mcmc_run_chains_in_scan_exchange_invariants(small_problem):
     sc, idx, _ = fn(bp)
     assert float(sc) == float(bs)
     np.testing.assert_array_equal(np.asarray(idx), np.asarray(bi))
+
+
+def test_exchange_step_degenerate_ranking_is_noop(small_problem):
+    """ISSUE 4 bugfix: all-equal best_score makes argmax == argmin — the
+    exchange must be a true NO-OP (guarded lax.cond), leaving EVERY leaf of
+    every chain bitwise-untouched."""
+    _, _, _, _, fn = small_problem
+    n = 12
+    keys = jax.random.split(jax.random.key(6), 4)
+    states = jax.vmap(lambda k: init_chain(k, n, fn))(keys)
+    states = states._replace(
+        best_score=jnp.zeros(4, jnp.float32),
+        win_idx=jnp.asarray([0, 1, 2, 3], jnp.int32),
+        adapt_err=jnp.asarray([0.1, -0.2, 0.3, -0.4], jnp.float32))
+    out = jax.jit(exchange_step)(states)
+    for name in ChainState._fields:
+        got, want = getattr(out, name), getattr(states, name)
+        if name == "key":
+            got, want = jax.random.key_data(got), jax.random.key_data(want)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want), name)
+
+
+def test_exchange_step_keeps_adaptive_stats_per_slot(small_problem):
+    """Non-degenerate exchange copies pos/caches/best_* — and ONLY those:
+    win_idx, dual-averaging error, step, accept counts and PRNG keys stay
+    strictly per-slot (a re-seeded chain keeps its own tuning)."""
+    _, _, _, _, fn = small_problem
+    n = 12
+    keys = jax.random.split(jax.random.key(8), 4)
+    states = jax.vmap(lambda k: init_chain(k, n, fn))(keys)
+    states = states._replace(
+        best_score=jnp.asarray([5., -2., 0., 1.], jnp.float32),
+        win_idx=jnp.asarray([3, 1, 0, 2], jnp.int32),
+        adapt_err=jnp.asarray([0.5, -0.1, 0.2, 0.9], jnp.float32),
+        accepts=jnp.asarray([7, 3, 9, 1], jnp.int32),
+        step=jnp.asarray([10, 10, 10, 10], jnp.int32))
+    out = jax.jit(exchange_step)(states)
+    # the worst slot really was re-seeded...
+    np.testing.assert_array_equal(np.asarray(out.pos[1]),
+                                  np.asarray(states.pos[0]))
+    # ...but per-slot statistics never move
+    for name in ("win_idx", "adapt_err", "accepts", "step"):
+        np.testing.assert_array_equal(np.asarray(getattr(out, name)),
+                                      np.asarray(getattr(states, name)), name)
+    np.testing.assert_array_equal(
+        np.asarray(jax.random.key_data(out.key)),
+        np.asarray(jax.random.key_data(states.key)))
+
+
+def test_adaptive_chains_with_exchange_keep_per_slot_windows(small_problem):
+    """mcmc_run_chains_adaptive + periodic in-scan exchange: the selection
+    stays inside the static window set per chain, and on a FLAT table (all
+    best_score equal, the degenerate ranking every round) the guarded
+    exchange leaves the run bitwise-identical to exchange_every=0."""
+    _, _, _, _, fn = small_problem
+    n = 12
+    from repro.core.mcmc import mcmc_run_chains_adaptive
+    sts = mcmc_run_chains_adaptive(jax.random.key(3), 4, n, fn, 60,
+                                   windows=(2, 4), delta_fns=(None, None),
+                                   burn_in=20, exchange_every=15)
+    assert set(np.asarray(sts.win_idx).tolist()) <= {0, 1}
+    assert np.isfinite(np.asarray(sts.adapt_err)).all()
+
+    flat = lambda pos: (jnp.float32(0.0), jnp.zeros(n, jnp.int32),
+                        jnp.zeros(n, jnp.float32))
+    a = mcmc_run_chains_adaptive(jax.random.key(4), 3, n, flat, 40,
+                                 windows=(2, 4), delta_fns=(None, None),
+                                 burn_in=10, exchange_every=10)
+    b = mcmc_run_chains_adaptive(jax.random.key(4), 3, n, flat, 40,
+                                 windows=(2, 4), delta_fns=(None, None),
+                                 burn_in=10, exchange_every=0)
+    np.testing.assert_array_equal(np.asarray(a.pos), np.asarray(b.pos))
+    np.testing.assert_array_equal(np.asarray(a.win_idx),
+                                  np.asarray(b.win_idx))
+    np.testing.assert_array_equal(np.asarray(a.adapt_err),
+                                  np.asarray(b.adapt_err))
 
 
 def test_mcmc_run_chains_exchange_off_matches_legacy(small_problem):
@@ -320,6 +451,75 @@ def test_restore_extended_chainstate_from_pre_tentpole_checkpoint(
         assert float(sc) == float(st2.score[c])
         np.testing.assert_array_equal(np.asarray(ls),
                                       np.asarray(st2.cur_ls[c]))
+
+
+def test_restore_across_engine_variants_reconciles_planes(tmp_path,
+                                                          small_problem):
+    """ISSUE 4 bugfix, both directions: a sharded-run snapshot (zero-size
+    mask_planes placeholder) restored into the bitmask engine, and a
+    full-planes snapshot restored into a placeholder engine, previously left
+    a wrong-shaped planes leaf (allow_missing only backfills MISSING
+    leaves). reconcile_mask_planes rebuilds the derived cache from the
+    restored positions / resets the placeholder, and the chain continues
+    bitwise-correctly."""
+    from repro.checkpoint import restore_checkpoint, save_checkpoint
+    from repro.core.mcmc import mcmc_step
+    from repro.launch.bn_learn import reconcile_mask_planes
+
+    table, pst, cm, block, fn = small_problem
+    n = 12
+    planes_fn = functools.partial(build_violation_planes, pst)
+    keys = jax.random.split(jax.random.key(12), 2)
+    with_planes = jax.vmap(
+        lambda k: init_chain(k, n, fn, planes_fn=planes_fn))(keys)
+    placeholder = jax.vmap(lambda k: init_chain(k, n, fn))(keys)
+    pack = lambda st: tuple(jax.tree.map(
+        np.asarray, st._replace(key=jax.random.key_data(st.key))))
+    unpack = lambda t: ChainState(*[jnp.asarray(x) for x in t])._replace(
+        key=jax.random.wrap_key_data(jnp.asarray(t[0])))
+
+    # direction 1: placeholder snapshot -> bitmask engine
+    save_checkpoint(str(tmp_path / "a"), 1, pack(placeholder))
+    restored, _ = restore_checkpoint(str(tmp_path / "a"), pack(with_planes),
+                                     step=1, allow_missing=True)
+    st = unpack(restored)
+    assert st.mask_planes.shape == (2, 0)          # the wrong-shaped leaf
+    st = reconcile_mask_planes(st, lambda p: jax.vmap(planes_fn)(p))
+    assert st.mask_planes.shape == with_planes.mask_planes.shape
+    np.testing.assert_array_equal(np.asarray(st.mask_planes),
+                                  np.asarray(jax.vmap(planes_fn)(st.pos)))
+
+    def bfn(pos, lo, prev_ls, prev_idx, pos_old, planes):
+        return score_order_delta_bitmask(table, cm, pos, prev_ls, prev_idx,
+                                         lo, pos_old, planes, window=4,
+                                         block=block)
+
+    step = jax.jit(jax.vmap(
+        lambda s: mcmc_step(s, fn, BitmaskDelta(bfn), 4)))
+    for _ in range(5):
+        st = step(st)
+    for c in range(2):
+        sc, _, ls = fn(st.pos[c])
+        assert float(sc) == float(st.score[c])
+        np.testing.assert_array_equal(np.asarray(ls),
+                                      np.asarray(st.cur_ls[c]))
+        np.testing.assert_array_equal(np.asarray(st.mask_planes[c]),
+                                      np.asarray(planes_fn(st.pos[c])))
+
+    # direction 2: full-planes snapshot -> placeholder engine
+    save_checkpoint(str(tmp_path / "b"), 1, pack(with_planes))
+    restored, _ = restore_checkpoint(str(tmp_path / "b"), pack(placeholder),
+                                     step=1, allow_missing=True)
+    st = unpack(restored)
+    assert st.mask_planes.ndim == 4                # the wrong-shaped leaf
+    st = reconcile_mask_planes(st, None)
+    assert st.mask_planes.shape == (2, 0)
+    step = jax.jit(jax.vmap(lambda s: mcmc_step(s, fn, None, 4)))
+    for _ in range(3):
+        st = step(st)
+    for c in range(2):
+        sc, _, _ = fn(st.pos[c])
+        assert float(sc) == float(st.score[c])
 
 
 def test_new_leaves_roundtrip_through_checkpoint(tmp_path, small_problem):
