@@ -4,7 +4,8 @@ export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: test bench-smoke bench-delta bench-mcmc bench-mcmc-smoke \
         bench-mcmc-sharded bench-mcmc-sharded-smoke \
-        bench-preprocess bench-preprocess-smoke
+        bench-preprocess bench-preprocess-smoke \
+        bench-preprocess-stream bench-preprocess-stream-smoke
 
 test:
 	$(PY) -m pytest -q
@@ -36,3 +37,11 @@ bench-preprocess:
 
 bench-preprocess-smoke:
 	$(PY) benchmarks/preprocess_bench.py --smoke
+
+# streaming-pruned assembly vs dense build-then-prune: wall clock + peak
+# assembly bytes + peak RSS; rows merge into BENCH_preprocess.json by config
+bench-preprocess-stream:
+	$(PY) benchmarks/preprocess_bench.py --stream
+
+bench-preprocess-stream-smoke:
+	$(PY) benchmarks/preprocess_bench.py --stream --smoke

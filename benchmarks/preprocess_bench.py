@@ -12,13 +12,23 @@ construction both ways on identical data:
 and reports the speedup plus the max absolute score deviation (gate: >= 3x
 at n = 64 and <= 1e-4 error; the fused path is bitwise-equal on CPU).
 
-  PYTHONPATH=src python benchmarks/preprocess_bench.py [--smoke] [--samples M]
+``--stream`` benches the streaming-pruned assembly instead (ISSUE 6
+tentpole): dense fused-build-then-prune vs preprocess/streaming.py going
+straight into the SparseScoreTable, reporting wall clocks, the streaming
+path's self-measured peak assembly bytes vs the dense (n, S) table bytes,
+and process peak RSS. Equality of the two pruned tables is asserted before
+anything is timed. Rows carry mode="stream" so the merge-by-config writer
+files them beside — never over — the dense-vs-fused rows.
 
-Emits experiments/bench/BENCH_preprocess.json.
+  PYTHONPATH=src python benchmarks/preprocess_bench.py \
+      [--smoke] [--stream] [--samples M]
+
+Emits experiments/bench/BENCH_preprocess.json (merged by row config).
 """
 from __future__ import annotations
 
 import argparse
+import resource
 
 import numpy as np
 
@@ -38,6 +48,11 @@ from repro.preprocess import build_score_table_fused
 # tractable on CPU — the fused/dense ratio only grows with S.
 SIZES = [(16, 2, 3), (37, 2, 3), (64, 2, 2)]
 SMOKE_SIZES = [(16, 2, 2)]
+# --stream sizes: big enough that the dense (n, S) intermediate dominates
+# (n = 64, s = 4 -> S ~ 637k, dense table ~163 MB with its rank map).
+STREAM_SIZES = [(64, 2, 3), (64, 2, 4)]
+STREAM_SMOKE_SIZES = [(16, 2, 3)]
+STREAM_DELTA = 20.0
 
 
 def bench_size(n: int, q: int, s: int, m: int) -> dict:
@@ -65,12 +80,64 @@ def bench_size(n: int, q: int, s: int, m: int) -> dict:
     }
 
 
+def bench_stream(n: int, q: int, s: int, m: int, delta: float) -> dict:
+    rng = np.random.default_rng(n)
+    data = rng.integers(0, q, size=(m, n)).astype(np.int32)
+
+    def run_dense_prune():
+        return build_score_table_fused(data, q=q, s=s, prune_delta=delta,
+                                       streaming=False)
+
+    def run_stream():
+        return build_score_table_fused(data, q=q, s=s, prune_delta=delta)
+
+    # correctness first — the two pruned tables must be bitwise identical
+    sp_d = run_dense_prune()
+    sp_s, info = build_score_table_fused(data, q=q, s=s, prune_delta=delta,
+                                         return_info=True)
+    for field in ("kept_idx", "kept_ls", "kept_parents", "keys", "vals"):
+        a = np.asarray(getattr(sp_d, field))
+        b = np.asarray(getattr(sp_s, field))
+        assert np.array_equal(a, b), f"stream != dense+prune on {field}"
+    del sp_d, sp_s
+
+    t_dense = timeit(lambda: run_dense_prune().kept_ls)
+    t_stream = timeit(lambda: run_stream().kept_ls)
+    S = n_parent_sets(n - 1, s)
+    return {
+        "n": n, "q": q, "s": s, "m": m, "S": S,
+        "mode": "stream", "prune_delta": delta,
+        "dense_s": t_dense,
+        "stream_s": t_stream,
+        "speedup": t_dense / t_stream,
+        "dense_table_bytes": n * S * 4,
+        "peak_assembly_bytes": info["peak_assembly_bytes"],
+        "assembly_mem_frac": info["peak_assembly_bytes"] / (n * S * 4),
+        "peak_rss_kb": resource.getrusage(resource.RUSAGE_SELF).ru_maxrss,
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny size — CI wiring check, seconds")
+    ap.add_argument("--stream", action="store_true",
+                    help="bench the streaming-pruned assembly vs dense "
+                         "build-then-prune instead of dense-vs-fused")
     ap.add_argument("--samples", type=int, default=400)
     args = ap.parse_args(argv)
+
+    if args.stream:
+        sizes = STREAM_SMOKE_SIZES if args.smoke else STREAM_SIZES
+        m = 100 if args.smoke else args.samples
+        rows = [bench_stream(n, q, s, m, STREAM_DELTA)
+                for (n, q, s) in sizes]
+        emit("BENCH_preprocess", rows)
+        last = rows[-1]
+        print(f"\nn={last['n']} s={last['s']}: streaming assembly peaks at "
+              f"{100 * last['assembly_mem_frac']:.1f}% of the dense table "
+              f"bytes ({last['speedup']:.2f}x wall clock vs dense+prune)")
+        return rows
 
     sizes = SMOKE_SIZES if args.smoke else SIZES
     m = 100 if args.smoke else args.samples

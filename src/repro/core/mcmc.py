@@ -152,11 +152,18 @@ def _propose_swap(key: jax.Array, pos: jax.Array) -> jax.Array:
     return pos.at[a].set(pb).at[b].set(pa)
 
 
-def propose_move(key: jax.Array, pos: jax.Array, *, window: int):
+def _propose_move_impl(key: jax.Array, pos: jax.Array, *, window: int):
     """Bounded-window move mixture. Returns (new_pos, lo) where every changed
     position lies in [lo, lo+window-1]. Requires window ≥ 2 (and n ≥ 2);
     window > n is clamped to n (callers that should refuse instead — the CLI
     — validate before tracing, launch/bn_learn.main).
+
+    Already-traced callers (the scan bodies) use this raw impl so the move
+    inlines into the engine computation; the public `propose_move` below is
+    the jitted entry point for eager callers. The branch closures below are
+    rebuilt on every Python call, so an un-jitted eager call re-traces and
+    re-compiles the `lax.switch` each time — thousands of such calls (the
+    property tests) exhaust the JIT code-mapping budget and crash LLVM.
 
     Symmetry: each move's reverse is generated with the same probability
     (swap/reversal pick unordered windows; insertion draws (a, ±d) and the
@@ -202,6 +209,10 @@ def propose_move(key: jax.Array, pos: jax.Array, *, window: int):
     return new_pos, lo.astype(jnp.int32)
 
 
+propose_move = functools.partial(jax.jit,
+                                 static_argnames=("window",))(_propose_move_impl)
+
+
 def _propose_and_score(state: ChainState, k_prop: jax.Array,
                        score_fn: ScoreFn,
                        delta_fn: DeltaFn | BitmaskDelta | None, window: int):
@@ -209,7 +220,7 @@ def _propose_and_score(state: ChainState, k_prop: jax.Array,
     full, plain-delta and bitmask-delta paths. Returns
     (new_pos, new_score, new_idx, new_ls, new_planes)."""
     if window >= 2:
-        new_pos, lo = propose_move(k_prop, state.pos, window=window)
+        new_pos, lo = _propose_move_impl(k_prop, state.pos, window=window)
     else:
         new_pos, lo = _propose_swap(k_prop, state.pos), jnp.int32(0)
     if isinstance(delta_fn, BitmaskDelta):

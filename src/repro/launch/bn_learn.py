@@ -11,7 +11,12 @@ Usage (also the library entry point used by examples/ and benchmarks/):
 (count-once-per-subset + LUT scoring, ~20x the reference loop at n = 64 on
 CPU) with a disk cache (--cache-dir) so repeat runs skip the stage entirely;
 --prune-delta > 0 additionally hash-compresses the table to per-node score
-lists, and the MCMC hot path switches to the O(n*K) pruned scorer.
+lists, and the MCMC hot path switches to the O(n*K) pruned scorer. Above
+S >= AUTO_PRUNE_S parent sets per node the fused path makes that pruned
+engine the DEFAULT (delta = AUTO_PRUNE_DELTA, built streamingly with no
+dense (n, S) intermediate — preprocess/streaming.py); --no-auto-prune
+reverts to the dense build. That switch is what takes the driver to the
+n = 100, s = 4 scale.
 
 The per-iteration engine (ISSUE 3) defaults to the bitmask-cached delta path
 on dense tables (cached consistency planes in ChainState, patched with word
@@ -41,6 +46,7 @@ import numpy as np
 from ..checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from ..core import (adjacency_from_ranks, build_score_table, mcmc_run,
                     random_cpts, roc_point)
+from ..core.combinatorics import n_parent_sets
 from ..core.mcmc import (BitmaskDelta, ChainState, exchange_best,
                          exchange_step, init_chain, mcmc_run_adaptive,
                          mcmc_run_chains, mcmc_run_chains_adaptive, mcmc_step)
@@ -59,7 +65,19 @@ from ..preprocess import SparseScoreTable, build_score_table_fused
 
 __all__ = ["LearnConfig", "learn_structure", "make_score_fn",
            "make_delta_fn", "adaptive_window_set", "reconcile_mask_planes",
-           "main"]
+           "main", "AUTO_PRUNE_S", "AUTO_PRUNE_DELTA"]
+
+# Above this many parent sets per node, the fused path defaults to the
+# streaming-pruned engine (preprocess/streaming.py + the O(n*K) pruned
+# scorers): the dense (n, S) table at S = 200k, n = 100 is ~80 MB and the
+# (n, S) rank map doubles it, while the pruned table is a few MB — and at
+# the n = 100, s = 4 gate (S ~ 3.9M) dense assembly is simply out of reach.
+AUTO_PRUNE_S = 200_000
+# Default pruning delta for the auto-switch. Kept wide (natural-log units):
+# parent sets more than 20 nats below a node's per-node best contribute
+# nothing to the max-scorer walk in practice, so the exactness condition
+# (dense argmax survives pruning) holds at equilibrium.
+AUTO_PRUNE_DELTA = 20.0
 
 
 @dataclass
@@ -93,6 +111,10 @@ class LearnConfig:
     prune_delta: float = 0.0      # > 0: hash-compress the table, keeping per
                                   # node only parent sets within this delta
                                   # of its best (fused pipeline only)
+    auto_prune: bool = True       # fused path: switch to the streaming
+                                  # pruned engine (delta=AUTO_PRUNE_DELTA)
+                                  # when S >= AUTO_PRUNE_S and the run is
+                                  # compatible (max scorer, not sharded)
     cache_dir: str = ""           # preprocessing disk cache ("" = off)
 
 
@@ -350,11 +372,19 @@ def learn_structure(data: np.ndarray, cfg: LearnConfig, *,
     n = data.shape[1]
     t0 = time.time()
     cache_hit = False
+    prune_delta = cfg.prune_delta if cfg.prune_delta > 0 else None
+    auto_pruned = False
+    if (cfg.preprocess == "fused" and prune_delta is None and cfg.auto_prune
+            and not cfg.sharded and cfg.scorer == "max"
+            and n_parent_sets(n - 1, cfg.s) >= AUTO_PRUNE_S):
+        # default engine above the size threshold: streaming-pruned table +
+        # O(n*K) pruned scorers — the dense (n, S) build is the memory wall
+        prune_delta = AUTO_PRUNE_DELTA
+        auto_pruned = True
     if cfg.preprocess == "fused":
         st, pre_info = build_score_table_fused(
             data, q=cfg.q, s=cfg.s, gamma=cfg.gamma, ess=cfg.ess,
-            prior_matrix=prior_matrix,
-            prune_delta=cfg.prune_delta if cfg.prune_delta > 0 else None,
+            prior_matrix=prior_matrix, prune_delta=prune_delta,
             cache_dir=cfg.cache_dir or None, return_info=True)
         cache_hit = pre_info["cache_hit"]
     else:
@@ -383,6 +413,7 @@ def learn_structure(data: np.ndarray, cfg: LearnConfig, *,
             "score": float(best_score),
             "preprocess_s": t_pre,
             "preprocess_cache_hit": cache_hit,
+            "auto_pruned": auto_pruned,
             "iteration_s": t_iter,
             "per_iteration_s": t_iter / max(cfg.iters, 1),
             "accept_rate": float(accepts) / max(total_prop, 1),
@@ -509,6 +540,7 @@ def learn_structure(data: np.ndarray, cfg: LearnConfig, *,
         "score": float(best_score),
         "preprocess_s": t_pre,
         "preprocess_cache_hit": cache_hit,
+        "auto_pruned": auto_pruned,
         "iteration_s": t_iter,
         "per_iteration_s": t_iter / max(cfg.iters, 1),
         "accept_rate": float(accepts) / max(total_prop, 1),
@@ -574,6 +606,10 @@ def main(argv=None) -> dict:
                     help="> 0: hash-compress the score table, keeping per "
                          "node only parent sets within this delta of its "
                          "best (fused preprocessing only)")
+    ap.add_argument("--no-auto-prune", action="store_true",
+                    help="disable the automatic switch to the streaming "
+                         "pruned engine above S >= %d parent sets per node "
+                         "(fused preprocessing only)" % AUTO_PRUNE_S)
     ap.add_argument("--cache-dir", default="experiments/score_cache",
                     help="preprocessing disk cache directory ('' disables); "
                          "only consulted with --preprocess fused")
@@ -607,6 +643,7 @@ def main(argv=None) -> dict:
                       exchange_every=args.exchange_every,
                       preprocess=args.preprocess,
                       prune_delta=args.prune_delta,
+                      auto_prune=not args.no_auto_prune,
                       cache_dir=(args.cache_dir if args.preprocess == "fused"
                                  else ""),
                       checkpoint_dir=args.checkpoint_dir,
@@ -628,8 +665,12 @@ def main(argv=None) -> dict:
         mode += f"+exch({out['exchange_every']})"
     pre = f"pre={out['preprocess_s']:.2f}s"
     if args.preprocess == "fused":
-        pre += " (fused, cache hit)" if out["preprocess_cache_hit"] \
-            else " (fused)"
+        tags = ["fused"]
+        if out.get("auto_pruned"):
+            tags.append("auto-pruned")
+        if out["preprocess_cache_hit"]:
+            tags.append("cache hit")
+        pre += f" ({', '.join(tags)})"
     print(f"{args.network}: n={truth.shape[0]} S={out['S']} "
           f"score={out['score']:.2f} TP={tp:.3f} FP={fp:.4f} "
           f"{pre} "

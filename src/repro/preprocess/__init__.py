@@ -23,11 +23,19 @@ sparse.py           §III-A memory-saving strategy: per-node score lists
                     open-addressing hash table (the paper's chained hash
                     buckets, TPU-vectorized) + packed lists for the
                     order-scoring hot path, with an exact dense fallback.
+streaming.py        §III-A taken at its word: fused chunks rank-gathered
+                    chunk-locally and merged straight into the pruned
+                    SparseScoreTable — peak memory O(n·K + chunk·n), no
+                    (n, S) dense table or rank map ever materialised
+                    (bitwise-equal to dense+prune). The engine behind
+                    prune_delta runs; reaches n = 100, s = 4.
 cache.py            preprocessing disk cache keyed on (data, q, s, ess,
-                    gamma, prior): repeated bn_learn runs skip the stage.
-pipeline.py         the driver: cache -> plan -> fused pass -> rank-gather
-                    assembly (the rank IS the hash address, core/
-                    combinatorics) -> optional pruning.
+                    gamma, prior [+ prune_delta/max_keep for pruned
+                    entries]); manifests verified on restore: repeated
+                    bn_learn runs skip the stage, never get a wrong table.
+pipeline.py         the driver: cache -> plan -> fused pass -> dense
+                    rank-gather assembly (the rank IS the hash address) or
+                    streaming-pruned assembly -> cache store.
 ==================  =========================================================
 
 core/scores.build_score_table remains the oracle; tests/test_preprocess.py
@@ -38,9 +46,11 @@ from .fused import fused_scores_pallas, fused_scores_ref, score_luts
 from .pipeline import assemble_table, build_score_table_fused
 from .planner import PreprocessPlan, assign_chunks, chunk_costs, plan_preprocess
 from .sparse import SparseScoreTable, prune_table
+from .streaming import build_sparse_table_streaming
 
 __all__ = [
     "build_score_table_fused", "assemble_table",
+    "build_sparse_table_streaming",
     "fused_scores_ref", "fused_scores_pallas", "score_luts",
     "PreprocessPlan", "plan_preprocess", "assign_chunks", "chunk_costs",
     "SparseScoreTable", "prune_table",

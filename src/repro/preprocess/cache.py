@@ -1,32 +1,60 @@
 """Preprocessing disk cache: skip score-table construction on repeat runs.
 
 Keyed on everything the table depends on — a SHA-256 over the data bytes and
-the scoring hyperparameters (q, s, ess, gamma, prior matrix) — so a second
-`bn_learn` invocation with identical inputs restores the table instead of
-recomputing it. Storage rides checkpoint/checkpointer: atomic publish
-(write-to-temp + rename) means a killed run can never leave a
-readable-but-corrupt cache entry, and entries are plain .npy + manifest.
+the scoring hyperparameters (q, s, ess, gamma, prior matrix INCLUDING its
+shape/dtype) — so a second `bn_learn` invocation with identical inputs
+restores the table instead of recomputing it. Storage rides
+checkpoint/checkpointer: atomic publish (write-to-temp + rename) means a
+killed run can never leave a readable-but-corrupt cache entry, and entries
+are plain .npy + manifest.
 
-Always caches the DENSE table: pruning (sparse.prune_table) is cheap and
-delta-dependent, so one cache entry serves every --prune-delta setting.
+Two entry kinds now coexist (the "always caches the DENSE table" contract
+died with the streaming assembly — at n = 100, s = 4 the dense table is the
+1.6 GB intermediate the streaming path exists to avoid):
+
+* **dense** entries (``cache_key`` without ``prune_delta``): the (n, S)
+  table + PST. One entry serves every --prune-delta setting, since pruning
+  from dense is cheap. Written only by the dense pipeline path.
+* **sparse** entries (``cache_key`` with ``prune_delta``): the pruned
+  SparseScoreTable arrays (kept_idx / kept_ls / kept_parents), O(n·K) on
+  disk. Written by the streaming path; ``prune_delta`` (and the optional
+  ``max_keep`` cap) is part of the digest because the kept set depends on
+  it. The pipeline's lookup order is sparse -> dense (prune on the fly) ->
+  build.
+
+Restores are **verified against the request**: every entry stores a manifest
+(q, s, m, n, gamma, ess, kind, ...) and ``load_cached_*`` takes an
+``expect`` mapping — any mismatch (stale format, hand-mixed cache dirs,
+truncated copies) is treated as a logged miss instead of being served as a
+silently wrong-shape table.
 """
 from __future__ import annotations
 
 import hashlib
+import logging
 import os
 
 import numpy as np
 
 from ..checkpoint import latest_step, restore_checkpoint, save_checkpoint
 
-__all__ = ["cache_key", "load_cached_table", "store_cached_table"]
+__all__ = ["cache_key", "load_cached_table", "store_cached_table",
+           "load_cached_sparse", "store_cached_sparse"]
 
-_FORMAT = "preprocess-v1"     # bump to invalidate every cached table
+_FORMAT = "preprocess-v2"     # bump to invalidate every cached table
+
+logger = logging.getLogger(__name__)
 
 
 def cache_key(data: np.ndarray, *, q: int, s: int, gamma: float, ess: float,
-              prior_matrix: np.ndarray | None = None) -> str:
-    """Hex digest identifying one preprocessing problem instance."""
+              prior_matrix: np.ndarray | None = None,
+              prune_delta: float | None = None,
+              max_keep: int | None = None) -> str:
+    """Hex digest identifying one preprocessing problem instance.
+
+    ``prune_delta``/``max_keep`` enter the digest only when set — they key
+    the PRUNED (sparse) entries, whose kept set depends on both; dense
+    entries are delta-independent and keep the delta-free key."""
     h = hashlib.sha256()
     h.update(_FORMAT.encode())
     arr = np.ascontiguousarray(np.asarray(data, np.int32))
@@ -34,7 +62,12 @@ def cache_key(data: np.ndarray, *, q: int, s: int, gamma: float, ess: float,
     h.update(arr.tobytes())
     if prior_matrix is not None:
         R = np.ascontiguousarray(np.asarray(prior_matrix, np.float32))
+        # shape/dtype in the digest: R.tobytes() alone collides e.g. a
+        # transposed or reshaped prior with the original (satellite bugfix)
+        h.update(repr((R.shape, str(R.dtype))).encode())
         h.update(R.tobytes())
+    if prune_delta is not None:
+        h.update(repr(("pruned", float(prune_delta), max_keep)).encode())
     return h.hexdigest()[:24]
 
 
@@ -42,20 +75,85 @@ def _entry_dir(cache_dir: str, key: str) -> str:
     return os.path.join(cache_dir, key)
 
 
-def load_cached_table(cache_dir: str, key: str):
-    """(table, pst, psizes) numpy arrays, or None on miss."""
+def _manifest_ok(meta: dict, expect: dict | None, entry: str) -> bool:
+    """True iff every expected manifest field matches. A missing or
+    mismatching field means the entry was written by an older format or a
+    different problem — log and treat as a miss (never serve it)."""
+    if not expect:
+        return True
+    for field, want in expect.items():
+        got = meta.get(field, None)
+        if got != want:
+            logger.warning(
+                "preprocess cache: manifest mismatch at %s (%s: stored %r, "
+                "requested %r) — ignoring entry", entry, field, got, want)
+            return False
+    return True
+
+
+def load_cached_table(cache_dir: str, key: str,
+                      expect: dict | None = None):
+    """(table, pst, psizes) numpy arrays, or None on miss.
+
+    ``expect`` maps manifest fields (q, s, m, n, gamma, ess, ...) to the
+    values the caller is requesting; a stored manifest that disagrees is a
+    logged miss (satellite bugfix: never serve a wrong-shape table)."""
     entry = _entry_dir(cache_dir, key)
     if latest_step(entry) is None:
         return None
     tree_like = (np.zeros(0, np.float32), np.zeros(0, np.int32),
                  np.zeros(0, np.int32))
-    (table, pst, psizes), _ = restore_checkpoint(entry, tree_like, step=0)
+    try:
+        (table, pst, psizes), meta = restore_checkpoint(entry, tree_like,
+                                                        step=0)
+    except Exception as exc:                      # corrupt / truncated entry
+        logger.warning("preprocess cache: unreadable entry at %s (%s) — "
+                       "ignoring", entry, exc)
+        return None
+    if not _manifest_ok(dict(meta or {}), expect, entry):
+        return None
     return np.asarray(table), np.asarray(pst), np.asarray(psizes)
 
 
 def store_cached_table(cache_dir: str, key: str, table, pst, psizes,
                        metadata: dict | None = None) -> str:
+    meta = dict(metadata or {})
+    meta.setdefault("kind", "dense")
     tree = (np.asarray(table, np.float32), np.asarray(pst, np.int32),
             np.asarray(psizes, np.int32))
     return save_checkpoint(_entry_dir(cache_dir, key), 0, tree,
-                           metadata=metadata or {})
+                           metadata=meta)
+
+
+def load_cached_sparse(cache_dir: str, key: str,
+                       expect: dict | None = None):
+    """(kept_idx, kept_ls, kept_parents, meta) or None on miss. The same
+    manifest verification as :func:`load_cached_table` applies."""
+    entry = _entry_dir(cache_dir, key)
+    if latest_step(entry) is None:
+        return None
+    tree_like = (np.zeros(0, np.int32), np.zeros(0, np.float32),
+                 np.zeros(0, np.int32))
+    try:
+        (kept_idx, kept_ls, kept_parents), meta = restore_checkpoint(
+            entry, tree_like, step=0)
+    except Exception as exc:
+        logger.warning("preprocess cache: unreadable entry at %s (%s) — "
+                       "ignoring", entry, exc)
+        return None
+    meta = dict(meta or {})
+    if meta.get("kind") != "sparse" or not _manifest_ok(meta, expect, entry):
+        return None
+    return (np.asarray(kept_idx), np.asarray(kept_ls),
+            np.asarray(kept_parents), meta)
+
+
+def store_cached_sparse(cache_dir: str, key: str, kept_idx, kept_ls,
+                        kept_parents, metadata: dict | None = None) -> str:
+    meta = dict(metadata or {})
+    meta["kind"] = "sparse"
+    tree = (np.asarray(kept_idx, np.int32),
+            np.asarray(kept_ls, np.float32),
+            np.asarray(kept_parents, np.int32))
+    return save_checkpoint(_entry_dir(cache_dir, key), 0, tree,
+                           metadata=meta)

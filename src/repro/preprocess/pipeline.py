@@ -1,24 +1,49 @@
 """The fused preprocessing pipeline: cache -> plan -> fused count+score ->
-assemble -> (optional) prune.
+assemble (dense OR streaming-pruned) -> cache store.
 
 Replaces core/scores.build_score_table's host-side double loop (n nodes x
 S/chunk chunks, one device round-trip each) with:
 
 1. one fused count+score pass per column-subset chunk (fused.py) — all n
-   children of a chunk are scored by a single contraction, inside ONE jitted
-   scan per device (no per-chunk host sync);
+   children of a chunk are scored by a single contraction;
 2. cost-balanced chunk sharding across devices (planner.py, paper §III-B);
-3. a gather assembly: ls(i, pi) = |pi|*ln(gamma) + TI[rank(columns(pi, i)), i]
-   using the vectorized combination ranking (core/combinatorics) — the rank
-   IS the hash (paper §III-A), so assembly is two indexed reads per entry;
-4. optional hash compression of the result (sparse.py, --prune-delta) and a
-   disk cache keyed on (data, q, s, ess, gamma, prior) (cache.py).
+3. one of two assemblies:
 
-The result is bitwise-compatible with build_score_table on CPU (the oracle's
-reduction order is reproduced deliberately; see fused.py) at a fraction of
-the wall clock — benchmarks/preprocess_bench.py measures >= 3x at n = 64 and
-~10x at ALARM size, which is what makes n > 60 end-to-end practical (the
-paper's headline scale).
+   * **dense** (``prune_delta=None``, or ``streaming=False``): a single
+     jitted scan per device, then a gather
+     ls(i, pi) = |pi|*ln(gamma) + TI[rank(columns(pi, i)), i] using the
+     vectorized combination ranking (core/combinatorics) — the rank IS the
+     hash (paper §III-A). Materialises the (n, S) table (plus an (n, S)
+     host-side rank map), which is the memory wall at n >= 100;
+   * **streaming** (``prune_delta`` set — the default engine for pruned
+     tables, streaming.py): per-chunk dispatch whose (chunk, n) output is
+     rank-gathered chunk-locally and merged into per-node within-delta
+     candidate lists under a global running best, going straight into the
+     pruned SparseScoreTable. Peak memory O(n·K + chunk·n); NO dense (n, S)
+     table or rank map ever exists. Bitwise-equal to dense+prune
+     (tests/test_streaming.py pins it).
+
+4. a disk cache (cache.py) keyed on (data, q, s, ess, gamma, prior). Dense
+   runs cache the dense table (one entry serves every delta); streaming runs
+   cache the pruned representation under a key that additionally includes
+   (prune_delta, max_keep) — "always cache the DENSE table" is no longer
+   possible at streaming scale. Pruned lookups try sparse first, then fall
+   back to pruning a dense entry, then build. Every restore is
+   manifest-verified (wrong q/s/m/n/... is a logged miss, never a
+   wrong-shape table).
+
+The dense result is bitwise-compatible with build_score_table on CPU (the
+oracle's reduction order is reproduced deliberately; see fused.py) at a
+fraction of the wall clock — benchmarks/preprocess_bench.py measures >= 3x
+at n = 64 and ~10x at ALARM size, which is what makes n > 60 end-to-end
+practical; the streaming path extends reach to n = 100, s = 4 (S ~ 3.9M)
+where the dense intermediate alone is ~1.6 GB.
+
+With ``return_info=True`` the info dict has the SAME schema on cache hit and
+miss: {cache_hit, n, S, plan, preprocess_s, streaming,
+peak_assembly_bytes}. ``plan`` is None on a cache hit (no sharding was
+planned), a {n_chunks, n_devices, imbalance} dict otherwise;
+``peak_assembly_bytes`` is None unless the streaming assembly ran.
 """
 from __future__ import annotations
 
@@ -29,9 +54,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.combinatorics import build_pst, rank_combinations_batch
+from ..core.combinatorics import build_pst, n_parent_sets, rank_combinations_batch
 from ..core.scores import ScoreTable, validate_prior_matrix
-from .cache import cache_key, load_cached_table, store_cached_table
+from .cache import (cache_key, load_cached_sparse, load_cached_table,
+                    store_cached_sparse, store_cached_table)
 from .fused import (encode_subset_codes, fused_scores_pallas,
                     fused_scores_ref, score_luts)
 from .planner import plan_preprocess
@@ -48,7 +74,10 @@ def _rank_map(n: int, s: int, pst: np.ndarray, psizes: np.ndarray) -> np.ndarray
 
     Built one node at a time: the batch ranking's int64 temporaries are
     (S, s)-sized, so peak host memory stays ~S*s*8 bytes regardless of n
-    (an (n, S, s) broadcast would peak at ~12 GB for n=64, s=4)."""
+    (an (n, S, s) broadcast would peak at ~12 GB for n=64, s=4).
+
+    Dense-assembly only — the streaming path computes the INVERSE map chunk
+    by chunk (streaming.py) and never materialises this array."""
     out = np.empty((n, pst.shape[0]), np.int32)
     for i in range(n):
         cols = pst + (pst >= i)
@@ -73,7 +102,8 @@ def _run_device(data_ext, subs, sszs, lut_k, lut_j, chunk_ids, *, q, s, n,
                 ess, use_pallas, block_m, interpret):
     """One device's share: a single jitted scan over its chunk ids ->
     stacked (U, C, n) TI. Module-level so the trace is compiled once per
-    problem shape, not once per build call."""
+    problem shape, not once per build call. The streaming assembly reuses it
+    with (1,)-shaped chunk_ids (one trace serves all chunks)."""
     m = data_ext.shape[0]
     child_oh = jax.nn.one_hot(data_ext[:, :n].reshape(-1), q,
                               dtype=jnp.float32).reshape(m, n * q)
@@ -104,6 +134,8 @@ def build_score_table_fused(data: np.ndarray, *, q: int, s: int,
                             chunk: int = 1024,
                             prior_matrix: np.ndarray | None = None,
                             prune_delta: float | None = None,
+                            max_keep: int | None = None,
+                            streaming: bool | None = None,
                             cache_dir: str | None = None,
                             mesh=None, devices=None,
                             use_pallas: bool | None = None,
@@ -113,7 +145,15 @@ def build_score_table_fused(data: np.ndarray, *, q: int, s: int,
     """Drop-in replacement for core/scores.build_score_table (same table, same
     PST ordering) via the fused pipeline. Returns a ScoreTable — or a
     SparseScoreTable when ``prune_delta`` is set — and, with
-    ``return_info=True``, an info dict (cache_hit, plan imbalance, timings).
+    ``return_info=True``, an info dict with a schema that is IDENTICAL on
+    cache hit and miss (see module docstring).
+
+    ``streaming`` selects the assembly when ``prune_delta`` is set: None
+    (default) and True stream chunks straight into the pruned table with no
+    dense (n, S) intermediate; False forces the dense build-then-prune path
+    (the oracle the streaming tests compare against). ``max_keep``
+    optionally caps each node's kept list at its top-``max_keep`` scores
+    (streaming path only).
 
     ``mesh``/``devices`` pick the accelerators to shard chunks over
     (launch/mesh meshes work directly); default is the first local device.
@@ -128,28 +168,77 @@ def build_score_table_fused(data: np.ndarray, *, q: int, s: int,
     validate_prior_matrix(prior_matrix, n)
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
+    if streaming is None:
+        streaming = prune_delta is not None
+    streaming = bool(streaming) and prune_delta is not None
 
-    info: dict = {"cache_hit": False, "n": n, "S": None}
-    pst, psizes = build_pst(n - 1, s)
-    S = pst.shape[0]
-    info["S"] = S
+    S = n_parent_sets(n - 1, s)
+    info: dict = {"cache_hit": False, "n": n, "S": S, "plan": None,
+                  "preprocess_s": None, "streaming": streaming,
+                  "peak_assembly_bytes": None}
     log_gamma = float(np.log(gamma))
+    expect = {"q": q, "s": s, "m": m, "n": n,
+              "gamma": float(gamma), "ess": float(ess)}
+    if devices is None:
+        devices = (list(np.asarray(mesh.devices).flat) if mesh is not None
+                   else [jax.devices()[0]])
 
-    key = None
+    # ---- cache lookups: sparse (exact delta/max_keep) first, then dense
+    key = skey = None
     if cache_dir:
         key = cache_key(data, q=q, s=s, gamma=gamma, ess=ess,
                         prior_matrix=prior_matrix)
-        cached = load_cached_table(cache_dir, key)
+        if prune_delta is not None:
+            skey = cache_key(data, q=q, s=s, gamma=gamma, ess=ess,
+                             prior_matrix=prior_matrix,
+                             prune_delta=prune_delta, max_keep=max_keep)
+            hit = load_cached_sparse(cache_dir, skey, expect=expect)
+            if hit is not None:
+                kept_idx, kept_ls, kept_parents, _ = hit
+                sp = SparseScoreTable.from_kept(
+                    kept_idx, kept_ls, kept_parents,
+                    q=q, s=s, delta=prune_delta, S=S)
+                info.update(cache_hit=True, preprocess_s=time.time() - t0)
+                return (sp, info) if return_info else sp
+        cached = load_cached_table(cache_dir, key, expect=expect)
         if cached is not None:
             table_np, pst_c, psz_c = cached
-            info.update(cache_hit=True, preprocess_s=time.time() - t0)
+            info.update(cache_hit=True, streaming=False,
+                        preprocess_s=time.time() - t0)
             st = ScoreTable(jnp.asarray(table_np), np.asarray(pst_c),
                             np.asarray(psz_c), q, s)
             if prune_delta is not None:
                 st = prune_table(st, prune_delta)
             return (st, info) if return_info else st
 
-    # ---- plan: column subsets, chunked + cost-sharded (paper §III-B)
+    # ---- streaming assembly: chunks -> pruned table, no dense intermediate
+    if streaming:
+        from .streaming import build_sparse_table_streaming
+        sp, sinfo = build_sparse_table_streaming(
+            data, q=q, s=s, gamma=gamma, ess=ess, chunk=chunk,
+            delta=prune_delta, prior_matrix=prior_matrix, max_keep=max_keep,
+            devices=devices, use_pallas=use_pallas, block_m=block_m,
+            interpret=interpret)
+        info["plan"] = {k: sinfo[k] for k in
+                        ("n_chunks", "n_devices", "imbalance")}
+        info["peak_assembly_bytes"] = sinfo["peak_assembly_bytes"]
+        info["preprocess_s"] = time.time() - t0
+        if cache_dir:
+            store_cached_sparse(
+                cache_dir, skey or cache_key(
+                    data, q=q, s=s, gamma=gamma, ess=ess,
+                    prior_matrix=prior_matrix, prune_delta=prune_delta,
+                    max_keep=max_keep),
+                np.asarray(sp.kept_idx), np.asarray(sp.kept_ls),
+                np.asarray(sp.kept_parents),
+                metadata={**expect, "prune_delta": float(prune_delta),
+                          "max_keep": max_keep, "S": S})
+        return (sp, info) if return_info else sp
+
+    # ---- dense assembly -------------------------------------------------
+    pst, psizes = build_pst(n - 1, s)
+
+    # plan: column subsets, chunked + cost-sharded (paper §III-B)
     sub, ssz = build_pst(n, s)                   # subsets of ALL n columns
     Csub = sub.shape[0]
     chunk = min(chunk, Csub)
@@ -157,14 +246,11 @@ def build_score_table_fused(data: np.ndarray, *, q: int, s: int,
     sub_p = np.pad(sub, ((0, pad), (0, 0)), constant_values=-1)
     ssz_p = np.pad(ssz, (0, pad))
     nch = sub_p.shape[0] // chunk
-    if devices is None:
-        devices = (list(np.asarray(mesh.devices).flat) if mesh is not None
-                   else [jax.devices()[0]])
     plan = plan_preprocess(ssz_p, chunk, m, q, len(devices))
     info["plan"] = {"n_chunks": plan.n_chunks, "n_devices": plan.n_devices,
                     "imbalance": plan.imbalance}
 
-    # ---- execute: one jitted scan per device over its chunks
+    # execute: one jitted scan per device over its chunks
     data_ext = np.concatenate([data, np.zeros((m, 1), np.int32)], axis=1)
     subs3 = sub_p.reshape(nch, chunk, s)
     sszs2 = ssz_p.reshape(nch, chunk)
@@ -189,7 +275,7 @@ def build_score_table_fused(data: np.ndarray, *, q: int, s: int,
             TI[ci * chunk:(ci + 1) * chunk] = out[u]
     TI = jnp.asarray(TI[:Csub])
 
-    # ---- assemble: rank-gather + structure penalty (+ prior)
+    # assemble: rank-gather + structure penalty (+ prior)
     rmap = _rank_map(n, s, pst, psizes)
     table = assemble_table(TI, rmap, psizes, log_gamma)
     if prior_matrix is not None:
@@ -200,8 +286,7 @@ def build_score_table_fused(data: np.ndarray, *, q: int, s: int,
 
     if cache_dir:
         store_cached_table(cache_dir, key, np.asarray(table), pst, psizes,
-                           metadata={"q": q, "s": s, "gamma": gamma,
-                                     "ess": ess, "m": m, "n": n})
+                           metadata={**expect, "kind": "dense"})
 
     st = ScoreTable(table, pst, psizes, q, s)
     if prune_delta is not None:

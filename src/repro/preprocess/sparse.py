@@ -121,11 +121,50 @@ class SparseScoreTable:
 
     to_dense = table.fget
 
-    # ------------------------------------------------------------- builder
+    # ------------------------------------------------------------- builders
+    @classmethod
+    def from_kept(cls, kept_idx: np.ndarray, kept_ls: np.ndarray,
+                  kept_parents: np.ndarray, *, q: int, s: int, delta: float,
+                  S: int):
+        """Build the table from already-pruned per-node lists.
+
+        kept_idx: (n, K) PST ranks, ASCENDING per node, -1 padded (rank 0 —
+        the empty set — must be present for every node); kept_ls: (n, K) f32
+        scores (NEG_INF pad); kept_parents: (n, K, s) parent NODE ids (-1
+        pad). This is the single hash-construction path shared by
+        :meth:`from_dense` and the streaming assembly
+        (preprocess/streaming.py), so both produce bit-identical keys/vals/
+        max_probe for identical kept lists — the property the
+        streaming == dense+prune tests pin."""
+        kept_idx = np.asarray(kept_idx, np.int32)
+        kept_ls = np.asarray(kept_ls, np.float32)
+        kept_parents = np.asarray(kept_parents, np.int32)
+        n, K = kept_idx.shape
+        cap = 1 << max(3, int(np.ceil(np.log2(2 * max(K, 1)))))
+        log2_cap = int(np.log2(cap))
+        keys = np.full((n, cap), -1, np.int32)
+        vals = np.full((n, cap), np.float32(NEG_INF), np.float32)
+        max_probe = 1
+        for i in range(n):
+            idxs = kept_idx[i][kept_idx[i] >= 0].astype(np.int64)
+            slots = _hash(idxs, log2_cap)
+            for k, (t, h) in enumerate(zip(idxs, slots)):
+                probe = 1
+                while keys[i, h] != -1:
+                    h = (h + 1) % cap
+                    probe += 1
+                keys[i, h] = t
+                vals[i, h] = kept_ls[i, k]
+                max_probe = max(max_probe, probe)
+        return cls(keys=keys, vals=vals, kept_idx=kept_idx, kept_ls=kept_ls,
+                   kept_parents=kept_parents, max_probe=max_probe,
+                   q=q, s=s, delta=delta, S=S)
+
     @classmethod
     def from_dense(cls, table, pst, psizes, *, q: int, s: int, delta: float):
         """Prune a dense (n, S) table: keep {t : ls[i,t] >= best_i - delta}
         (plus the empty set, rank 0) per node, hash the survivors."""
+        del psizes                                   # layout-compat signature
         tbl = np.asarray(table)
         pst_np = np.asarray(pst)
         n, S = tbl.shape
@@ -134,15 +173,9 @@ class SparseScoreTable:
         keep[:, 0] = True                            # empty set: always valid
         counts = keep.sum(axis=1)
         K = int(counts.max())
-        cap = 1 << max(3, int(np.ceil(np.log2(2 * K))))
-        log2_cap = int(np.log2(cap))
-
-        keys = np.full((n, cap), -1, np.int32)
-        vals = np.full((n, cap), np.float32(NEG_INF), np.float32)
         kept_idx = np.full((n, K), -1, np.int32)
         kept_ls = np.full((n, K), np.float32(NEG_INF), np.float32)
         kept_parents = np.full((n, K, pst_np.shape[1]), -1, np.int32)
-        max_probe = 1
         for i in range(n):
             idxs = np.nonzero(keep[i])[0].astype(np.int64)
             kept_idx[i, :len(idxs)] = idxs
@@ -150,19 +183,8 @@ class SparseScoreTable:
             cands = pst_np[idxs]                     # (k, s) candidate space
             pn = cands + (cands >= i)                # -> node ids
             kept_parents[i, :len(idxs)] = np.where(cands < 0, -1, pn)
-            slots = _hash(idxs, log2_cap)
-            for t, h in zip(idxs, slots):
-                probe = 1
-                while keys[i, h] != -1:
-                    h = (h + 1) % cap
-                    probe += 1
-                keys[i, h] = t
-                vals[i, h] = tbl[i, t]
-                max_probe = max(max_probe, probe)
-        return cls(keys=keys, vals=vals, kept_idx=kept_idx, kept_ls=kept_ls,
-                   kept_parents=kept_parents, max_probe=max_probe,
-                   pst=pst_np, psizes=np.asarray(psizes), q=q, s=s,
-                   delta=delta, S=S)
+        return cls.from_kept(kept_idx, kept_ls, kept_parents, q=q, s=s,
+                             delta=delta, S=S)
 
 
 @functools.partial(jax.jit, static_argnames=("max_probe",))

@@ -1,0 +1,87 @@
+"""benchmarks/common.py merge-by-config writer: smoke runs must never evict
+gate rows from a BENCH_*.json trajectory (the clobbering was the satellite
+bug that erased the n = 64 gate evidence from the repo root)."""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                "benchmarks"))
+import common  # noqa: E402
+
+
+@pytest.fixture
+def bench_dirs(tmp_path, monkeypatch):
+    results = tmp_path / "bench"
+    root = tmp_path / "root"
+    results.mkdir()
+    root.mkdir()
+    monkeypatch.setattr(common, "RESULTS_DIR", str(results))
+    monkeypatch.setattr(common, "ROOT_DIR", str(root))
+    return results, root
+
+
+def _read(d, name):
+    with open(os.path.join(str(d), f"{name}.json")) as f:
+        return json.load(f)
+
+
+GATE_ROW = {"n": 64, "q": 2, "s": 2, "m": 400, "S": 43745,
+            "dense_s": 30.0, "fused_s": 1.5, "speedup": 20.0}
+SMOKE_ROW = {"n": 16, "q": 2, "s": 2, "m": 100, "S": 577,
+             "dense_s": 0.8, "fused_s": 1.1, "speedup": 0.7}
+
+
+def test_smoke_save_cannot_evict_gate_row(bench_dirs):
+    """The satellite regression: gate row first, smoke row second — BOTH
+    must be present afterwards, in both mirror locations."""
+    results, root = bench_dirs
+    common.save("BENCH_preprocess", [GATE_ROW])
+    common.save("BENCH_preprocess", [SMOKE_ROW])
+    for d in (results, root):
+        rows = _read(d, "BENCH_preprocess")
+        ns = sorted(r["n"] for r in rows)
+        assert ns == [16, 64], rows
+
+
+def test_same_config_row_is_replaced_not_duplicated(bench_dirs):
+    results, _ = bench_dirs
+    common.save("BENCH_preprocess", [GATE_ROW])
+    newer = dict(GATE_ROW, speedup=22.5, dense_s=31.0)
+    common.save("BENCH_preprocess", [newer])
+    rows = _read(results, "BENCH_preprocess")
+    assert len(rows) == 1
+    assert rows[0]["speedup"] == 22.5
+
+
+def test_mode_and_delta_distinguish_stream_rows(bench_dirs):
+    """A stream-mode row at the same (n, q, s, m) is a DIFFERENT config."""
+    results, _ = bench_dirs
+    stream = dict(GATE_ROW, mode="stream", prune_delta=20.0,
+                  stream_s=2.0, speedup=1.4)
+    common.save("BENCH_preprocess", [GATE_ROW])
+    common.save("BENCH_preprocess", [stream])
+    rows = _read(results, "BENCH_preprocess")
+    assert len(rows) == 2
+
+
+def test_merge_survives_legacy_single_dict_payload(bench_dirs):
+    """Pre-fix files sometimes held a bare dict; the merge writer must read
+    them and keep merging rather than crash or clobber."""
+    results, _ = bench_dirs
+    path = os.path.join(str(results), "legacy.json")
+    with open(path, "w") as f:
+        json.dump(GATE_ROW, f)
+    common.save("legacy", [SMOKE_ROW])
+    rows = _read(results, "legacy")
+    assert len(rows) == 2
+
+
+def test_merge_rows_pure_function():
+    merged = common.merge_rows([GATE_ROW], [SMOKE_ROW, dict(GATE_ROW,
+                                                            speedup=9.0)])
+    assert len(merged) == 2
+    assert merged[0]["speedup"] == 9.0       # same config replaced in place
+    assert merged[1]["n"] == 16
