@@ -5,7 +5,8 @@ export PYTHONPATH := src:$(PYTHONPATH)
 .PHONY: test bench-smoke bench-delta bench-mcmc bench-mcmc-smoke \
         bench-mcmc-sharded bench-mcmc-sharded-smoke \
         bench-preprocess bench-preprocess-smoke \
-        bench-preprocess-stream bench-preprocess-stream-smoke
+        bench-preprocess-stream bench-preprocess-stream-smoke \
+        bench-telemetry bench-telemetry-smoke telemetry-smoke
 
 test:
 	$(PY) -m pytest -q
@@ -45,3 +46,21 @@ bench-preprocess-stream:
 
 bench-preprocess-stream-smoke:
 	$(PY) benchmarks/preprocess_bench.py --stream --smoke
+
+# telemetry tap overhead (taps on vs off, same keys; gate <= 5% at n = 64);
+# rows merge into BENCH_mcmc.json with mode="telemetry"
+bench-telemetry:
+	$(PY) benchmarks/telemetry_bench.py
+
+bench-telemetry-smoke:
+	$(PY) benchmarks/telemetry_bench.py --smoke
+
+# end-to-end telemetry wiring check: a short --telemetry --stop-on-converge
+# run, then schema re-validation of the emitted JSONL trace
+telemetry-smoke:
+	$(PY) -m repro.launch.bn_learn --network stn --iters 400 --chains 4 \
+	  --s 2 --samples 300 --exchange-every 50 --telemetry \
+	  --stop-on-converge --trace-every 4 --check-every 100 \
+	  --rhat-threshold 1.2 --patience 2 \
+	  --trace-dir experiments/runs --run-name ci_smoke
+	$(PY) -m repro.telemetry.validate experiments/runs/ci_smoke.jsonl

@@ -33,6 +33,22 @@ CONFIG_KEYS = ("n", "q", "s", "m", "S", "iters", "chains", "window",
                "max_keep", "backend")
 
 
+_HOST_META: dict | None = None
+
+
+def host_meta() -> dict:
+    """Cached machine identity stamped into every bench row by :func:`save`:
+    reading a trajectory later, a 1-vCPU CI smoke and a multi-core gate box
+    must be tellable apart. Deliberately NOT in CONFIG_KEYS — the host
+    describes where a measurement ran, not what was measured, so merge
+    identity is unchanged."""
+    global _HOST_META
+    if _HOST_META is None:
+        from repro.telemetry import host_meta as _hm
+        _HOST_META = _hm()
+    return _HOST_META
+
+
 def timeit(fn, *args, warmup: int = 1, reps: int = 3) -> float:
     """Median wall seconds of fn(*args) with jax sync."""
     for _ in range(warmup):
@@ -89,6 +105,8 @@ def save(name: str, payload) -> None:
     docstring)."""
     os.makedirs(RESULTS_DIR, exist_ok=True)
     rows = payload if isinstance(payload, list) else [payload]
+    rows = [({**r, "host": host_meta()} if isinstance(r, dict)
+             and "host" not in r else r) for r in rows]
     dirs = [RESULTS_DIR] + ([ROOT_DIR] if name.startswith("BENCH_") else [])
     for d in dirs:
         path = os.path.join(d, f"{name}.json")

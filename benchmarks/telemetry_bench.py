@@ -1,0 +1,130 @@
+"""Telemetry overhead: the segmented bitmask engine with the in-scan taps ON
+vs OFF (ISSUE 7 gate: taps cost <= 5% iters/sec at n = 64).
+
+Both runs use the SAME segmented runner (core/mcmc.make_traced_segment_runner
+— the loop every telemetry-aware driver uses), the same keys and therefore
+the same proposals; the tapped run additionally carries the TraceState
+pytree and pays the per-iteration window-histogram add plus, every
+--trace-every iterations, the ring writes and the on-device adjacency
+unranking. The tap must be a pure OBSERVER: the final chain states are
+asserted bitwise-equal before anything is timed.
+
+  PYTHONPATH=src python benchmarks/telemetry_bench.py [--smoke] [--iters N]
+
+Rows land in BENCH_mcmc.json (mode="telemetry") beside the engine rows,
+mirrored to the repo root.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from .common import emit, timeit
+except ImportError:                      # run as a plain script
+    import os
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from common import emit, timeit
+
+from repro.core.mcmc import (BitmaskDelta, init_chain,
+                             make_traced_segment_runner, mcmc_step)
+from repro.core.order_scoring import (build_membership_planes,
+                                      build_violation_planes, delta_window,
+                                      score_order_blocked,
+                                      score_order_delta_bitmask)
+from repro.telemetry import init_trace, make_tap
+
+from mcmc_bench import make_problem
+
+WINDOW = 8
+CHAINS = 4
+GATE_N = 64
+GATE_OVERHEAD = 0.05            # taps may cost at most 5% iters/sec
+
+
+def bench_size(n: int, s: int, iters: int, trace_every: int = 8,
+               block: int = 4096) -> dict:
+    table, pst, S = make_problem(n, s, block)
+    block = min(block, table.shape[1])
+    w = delta_window(n, WINDOW)
+    assert w, f"n={n} too small for window {WINDOW}"
+    score_fn = functools.partial(score_order_blocked, table, pst, block=block)
+    cm = build_membership_planes(pst, n)
+    planes_fn = functools.partial(build_violation_planes, pst)
+
+    def bitmask_fn(pos, lo, prev_ls, prev_idx, pos_old, planes):
+        return score_order_delta_bitmask(table, cm, pos, prev_ls, prev_idx,
+                                         lo, pos_old, planes, window=w,
+                                         block=block)
+    step = lambda st: mcmc_step(st, score_fn, BitmaskDelta(bitmask_fn), w)
+
+    run_plain = make_traced_segment_runner(step)
+    run_tapped = make_traced_segment_runner(
+        step, tap=make_tap(n, s, trace_every))
+
+    def states0():
+        keys = jax.random.split(jax.random.key(0), CHAINS)
+        return jax.vmap(
+            lambda k: init_chain(k, n, score_fn, planes_fn=planes_fn))(keys)
+
+    # the tap must observe, never steer: same keys + same proposals, final
+    # chain states bitwise-equal (never time a bug)
+    a, _ = run_plain(states0(), None, jnp.int32(0), length=min(iters, 50))
+    b, tr = run_tapped(states0(), init_trace(CHAINS, n), jnp.int32(0),
+                       length=min(iters, 50))
+    np.testing.assert_array_equal(np.asarray(a.pos), np.asarray(b.pos))
+    np.testing.assert_array_equal(np.asarray(a.score), np.asarray(b.score))
+    np.testing.assert_array_equal(np.asarray(a.accepts),
+                                  np.asarray(b.accepts))
+    assert int(tr.taps) == min(iters, 50) // trace_every, "tap cadence broke"
+
+    t_plain = timeit(lambda: run_plain(states0(), None, jnp.int32(0),
+                                       length=iters)[0].score, reps=5)
+    t_tap = timeit(lambda: run_tapped(states0(), init_trace(CHAINS, n),
+                                      jnp.int32(0), length=iters)[0].score,
+                   reps=5)
+    return {
+        "n": n, "S": S, "window": w, "iters": iters, "chains": CHAINS,
+        "mode": "telemetry", "trace_every": trace_every,
+        "plain_ms_per_it": t_plain / iters * 1e3,
+        "tapped_ms_per_it": t_tap / iters * 1e3,
+        "overhead": t_tap / t_plain - 1.0,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes/iters — CI wiring check, seconds")
+    ap.add_argument("--iters", type=int, default=0,
+                    help="override iterations per timed run")
+    ap.add_argument("--s", type=int, default=3, help="max parent-set size")
+    ap.add_argument("--trace-every", type=int, default=8)
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        sizes, iters = [16], args.iters or 50
+    else:
+        sizes, iters = [16, 64], args.iters or 300
+
+    rows = [bench_size(n, args.s, iters, args.trace_every) for n in sizes]
+    emit("BENCH_mcmc", rows)
+    if not args.smoke:
+        last = rows[-1]
+        print(f"\nn={last['n']}: telemetry taps cost "
+              f"{last['overhead'] * 100:.1f}% iters/sec "
+              f"(gate <= {GATE_OVERHEAD * 100:g}% at n={GATE_N})")
+        if last["n"] == GATE_N and last["overhead"] > GATE_OVERHEAD:
+            raise SystemExit(
+                f"FAIL: {last['overhead'] * 100:.1f}% > "
+                f"{GATE_OVERHEAD * 100:g}% overhead gate")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -13,7 +13,7 @@ from .mcmc import (BitmaskDelta, ChainState, exchange_best, exchange_step,
                    init_chain, mcmc_run, mcmc_run_adaptive, mcmc_run_chains,
                    mcmc_run_chains_adaptive, mcmc_step, mcmc_step_adaptive,
                    propose_move)
-from .metrics import roc_point, structural_hamming
+from .metrics import edge_posterior, roc_point, structural_hamming
 from .order_scoring import (NEG_INF, build_membership_planes,
                             build_violation_planes, delta_window,
                             score_order_chunked, score_order_delta,
@@ -32,7 +32,7 @@ __all__ = [
     "exchange_step", "init_chain", "mcmc_run", "mcmc_run_adaptive",
     "mcmc_run_chains", "mcmc_run_chains_adaptive", "mcmc_step",
     "mcmc_step_adaptive", "propose_move",
-    "roc_point", "structural_hamming", "NEG_INF", "build_membership_planes",
+    "roc_point", "structural_hamming", "edge_posterior", "NEG_INF", "build_membership_planes",
     "build_violation_planes", "delta_window", "score_order_chunked",
     "score_order_delta", "score_order_delta_bitmask", "score_order_pruned",
     "score_order_pruned_delta",

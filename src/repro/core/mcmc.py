@@ -58,6 +58,19 @@ FROZEN once ``step ≥ burn_in``: a kernel whose parameters keep adapting
 forever is not a valid Markov chain (diminishing-adaptation conditions are
 easy to violate), whereas adapt-then-freeze makes every post-burn-in sample
 come from one fixed Metropolis kernel — the standard warm-up contract.
+
+Convergence telemetry (segmented runs)
+--------------------------------------
+
+:func:`make_traced_segment_runner` is the segmented counterpart of the
+one-shot run loops above: the same scan, cut into host-visible segments,
+optionally carrying a telemetry ``TraceState`` (repro.telemetry.taps)
+beside the chain stack and calling an in-scan tap each iteration. The host
+drains the trace between segments to compute split-R̂ / edge-marginal R̂
+and may stop the run early (bn_learn ``--stop-on-converge``) — runs then
+terminate on CONVERGENCE, with the iteration count as the cap, instead of
+the other way around. Global-iteration arithmetic keeps tap and exchange
+cadences identical across segment and checkpoint-restart boundaries.
 """
 from __future__ import annotations
 
@@ -73,7 +86,7 @@ __all__ = ["ChainState", "BitmaskDelta", "init_chain", "mcmc_run",
            "mcmc_run_adaptive", "mcmc_run_chains",
            "mcmc_run_chains_adaptive", "mcmc_step", "mcmc_step_adaptive",
            "propose_move", "exchange_best", "exchange_step",
-           "DEFAULT_TARGET_ACCEPT"]
+           "make_traced_segment_runner", "DEFAULT_TARGET_ACCEPT"]
 
 ScoreFn = Callable[[jnp.ndarray], tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]]
 # pos (n,) -> (score, best_idx (n,), best_ls (n,))
@@ -470,6 +483,59 @@ def mcmc_run_chains_adaptive(key: jax.Array, n_chains: int, n: int,
                                         target_accept=target_accept,
                                         burn_in=burn_in)
     return _run_chain_rounds(states, step, iters, exchange_every, n_chains)
+
+
+def make_traced_segment_runner(step, *, tap=None, exchange=None,
+                               exchange_every: int = 0,
+                               stacked_step: bool = False):
+    """The SEGMENTED run loop shared by every telemetry-aware path (the
+    single-device, checkpointed and sharded drivers in launch/bn_learn, and
+    benchmarks/telemetry_bench): a jitted
+
+        run_segment(states, trace, start, *, length) -> (states, trace)
+
+    scanning ``length`` iterations from global iteration ``start``. The host
+    calls it in a while loop, draining/analysing ``trace`` between segments
+    — which is what makes stop-on-converge possible at all: the scan stays
+    fully accelerator-resident, and the host only intervenes at segment
+    granularity.
+
+    * ``step``: per-chain ChainState -> ChainState (vmapped here), or — with
+      ``stacked_step=True`` — a whole-stack step like
+      core/sharded_scoring.sharded_chain_step (one shard_map program for all
+      chains).
+    * ``tap``: optional in-scan telemetry tap ``(trace, states, it) ->
+      trace`` (telemetry/taps.make_tap); ``it`` is the global 1-based
+      iteration, so trace cadence survives segment/restart boundaries.
+      With no tap, ``trace`` is carried untouched (pass None).
+    * ``exchange``: optional ``(states, trace) -> (states, trace)`` run
+      every ``exchange_every`` global iterations (telemetry counts re-seeds
+      via telemetry/taps.exchange_step_traced; plain runs wrap
+      :func:`exchange_step`). The cadence uses the same global-iteration
+      arithmetic as the checkpointed loop, so it survives restarts too.
+    """
+    if exchange is None:
+        exchange = lambda st, tr: (exchange_step(st), tr)
+
+    @functools.partial(jax.jit, static_argnames=("length",))
+    def run_segment(states, trace, start, *, length: int):
+        def body(carry, i):
+            st, tr = carry
+            st = step(st) if stacked_step else jax.vmap(step)(st)
+            it = start + i + 1
+            if tap is not None:
+                tr = tap(tr, st, it)
+            if exchange_every > 0:
+                st, tr = jax.lax.cond(it % exchange_every == 0,
+                                      lambda c: exchange(*c), lambda c: c,
+                                      (st, tr))
+            return (st, tr), None
+
+        (states, trace), _ = jax.lax.scan(body, (states, trace),
+                                          jnp.arange(length))
+        return states, trace
+
+    return run_segment
 
 
 def exchange_best(states: ChainState) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:

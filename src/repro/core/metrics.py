@@ -1,9 +1,21 @@
-"""Accuracy metrics: ROC points (paper §VI, Figs. 9–11)."""
+"""Accuracy metrics: ROC points (paper §VI, Figs. 9–11) and posterior edge
+marginals from the telemetry edge-count accumulator."""
 from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["roc_point", "structural_hamming"]
+__all__ = ["roc_point", "structural_hamming", "edge_posterior"]
+
+
+def _as_adjacency(a, name: str) -> np.ndarray:
+    """Validate one adjacency argument: square 2-D, boolean-ified, diagonal
+    (self-loops) dropped — self-loops are representation noise, not edges,
+    so bearers compare equal to their loop-free counterpart."""
+    a = np.asarray(a)
+    if a.ndim != 2 or a.shape[0] != a.shape[1]:
+        raise ValueError(f"{name} must be a square (n, n) adjacency, "
+                         f"got shape {a.shape}")
+    return a.astype(bool) & ~np.eye(a.shape[0], dtype=bool)
 
 
 def roc_point(learned: np.ndarray, truth: np.ndarray) -> tuple[float, float]:
@@ -11,11 +23,17 @@ def roc_point(learned: np.ndarray, truth: np.ndarray) -> tuple[float, float]:
 
     TP rate = recovered true edges / true edges;
     FP rate = spurious edges / true non-edges (diagonal excluded).
+    Degenerate inputs are well-defined rather than errors: n = 0 (or an
+    edgeless truth) yields rate 0 via the max(·, 1) clamps, and self-loops
+    on either argument are ignored.
     """
-    n = truth.shape[0]
+    t = _as_adjacency(truth, "truth")
+    l = _as_adjacency(learned, "learned")
+    if t.shape != l.shape:
+        raise ValueError(f"adjacency shapes differ: learned {l.shape} "
+                         f"vs truth {t.shape}")
+    n = t.shape[0]
     off = ~np.eye(n, dtype=bool)
-    t = truth.astype(bool) & off
-    l = learned.astype(bool) & off
     pos = t.sum()
     neg = off.sum() - pos
     tp = (l & t).sum()
@@ -24,6 +42,38 @@ def roc_point(learned: np.ndarray, truth: np.ndarray) -> tuple[float, float]:
 
 
 def structural_hamming(learned: np.ndarray, truth: np.ndarray) -> int:
-    n = truth.shape[0]
-    off = ~np.eye(n, dtype=bool)
-    return int(((learned.astype(bool) ^ truth.astype(bool)) & off).sum())
+    """Number of off-diagonal entries where the two adjacencies disagree
+    (0 for n = 0; self-loops ignored on both sides)."""
+    t = _as_adjacency(truth, "truth")
+    l = _as_adjacency(learned, "learned")
+    if t.shape != l.shape:
+        raise ValueError(f"adjacency shapes differ: learned {l.shape} "
+                         f"vs truth {t.shape}")
+    return int((l ^ t).sum())
+
+
+def edge_posterior(edge_counts: np.ndarray, n_samples: int) -> np.ndarray:
+    """Posterior edge-presence probabilities from accumulated counts.
+
+    ``edge_counts`` is the telemetry accumulator — (n, n) per-edge sample
+    counts, or (C, n, n) per-chain counts which are POOLED over chains (each
+    chain contributes ``n_samples`` thinned adjacency samples). Returns an
+    (n, n) float array in [0, 1] with a zero diagonal; ``n_samples == 0``
+    (no taps yet) returns all zeros instead of dividing by zero.
+    """
+    counts = np.asarray(edge_counts, np.float64)
+    if counts.ndim == 3:
+        total = n_samples * counts.shape[0]
+        counts = counts.sum(0)
+    elif counts.ndim == 2:
+        total = n_samples
+    else:
+        raise ValueError("edge_counts must be (n, n) or (C, n, n), got "
+                         f"shape {counts.shape}")
+    if counts.shape[0] != counts.shape[1]:
+        raise ValueError(f"edge_counts must be square, got {counts.shape}")
+    if np.any(counts < 0) or (total and np.any(counts > total)):
+        raise ValueError("edge_counts outside [0, n_samples]")
+    p = counts / total if total else np.zeros_like(counts)
+    np.fill_diagonal(p, 0.0)
+    return p

@@ -30,14 +30,25 @@ vmap locally); the best-graph exchange at the end is the same max+argmax
 reduction the scoring kernel uses, one level up. Periodic checkpointing makes
 the walk restartable — a killed worker re-joins from the last snapshot (new
 ChainState leaves are backfilled when restoring a pre-bitmask snapshot, and
-the consistency planes are rebuilt from the restored positions).
+the consistency planes are rebuilt from the restored positions; telemetry
+trace leaves append after the ChainState leaves and backfill the same way).
+
+--telemetry (ISSUE 7) threads the repro.telemetry subsystem through every
+run loop: in-scan accelerator-resident taps (score/accept rings, window
+histogram, thinned posterior edge counts) carried beside ChainState through
+the shared segmented runner, and a host-side collector between segments
+computing split-R̂ over the chain score traces and max-R̂ over cross-chain
+edge marginals, appended as schema-versioned JSONL under --trace-dir.
+--stop-on-converge turns the R̂ pair into an early-stopping rule (both below
+--rhat-threshold for --patience consecutive checks), so long runs stop on
+convergence rather than on the iteration cap.
 """
 from __future__ import annotations
 
 import argparse
 import functools
 import time
-from dataclasses import dataclass
+from dataclasses import asdict, dataclass
 
 import jax
 import jax.numpy as jnp
@@ -47,9 +58,10 @@ from ..checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from ..core import (adjacency_from_ranks, build_score_table, mcmc_run,
                     random_cpts, roc_point)
 from ..core.combinatorics import n_parent_sets
-from ..core.mcmc import (BitmaskDelta, ChainState, exchange_best,
-                         exchange_step, init_chain, mcmc_run_adaptive,
-                         mcmc_run_chains, mcmc_run_chains_adaptive, mcmc_step)
+from ..core.mcmc import (BitmaskDelta, ChainState, exchange_best, init_chain,
+                         make_traced_segment_runner, mcmc_run_adaptive,
+                         mcmc_run_chains, mcmc_run_chains_adaptive, mcmc_step,
+                         mcmc_step_adaptive)
 from ..core.order_scoring import (build_membership_planes,
                                   build_violation_planes, delta_window,
                                   score_order_blocked, score_order_delta,
@@ -116,6 +128,17 @@ class LearnConfig:
                                   # when S >= AUTO_PRUNE_S and the run is
                                   # compatible (max scorer, not sharded)
     cache_dir: str = ""           # preprocessing disk cache ("" = off)
+    # --- convergence telemetry (repro.telemetry; ISSUE 7) ----------------
+    telemetry: bool = False       # in-scan taps + host collector + JSONL
+    trace_every: int = 8          # tap cadence (iterations per ring write)
+    check_every: int = 0          # collector check period (0 = auto:
+                                  # max(64, 16 * trace_every); checkpointed
+                                  # runs check at checkpoint boundaries)
+    stop_on_converge: bool = False  # R̂ early stopping (implies telemetry)
+    rhat_threshold: float = 1.05  # both R̂s must drop below this ...
+    patience: int = 3             # ... for this many consecutive checks
+    trace_dir: str = "experiments/runs"  # JSONL trace directory
+    run_name: str = ""            # trace file stem ("" = timestamped)
 
 
 def _padded(st, block: int):
@@ -272,12 +295,53 @@ def reconcile_mask_planes(states: ChainState, planes_fn) -> ChainState:
         mask_planes=jnp.zeros((states.pos.shape[0], 0), jnp.uint32))
 
 
-def _run_sharded(st, cfg: LearnConfig, key, n: int):
+def _auto_check_every(cfg: LearnConfig) -> int:
+    """Collector check period for non-checkpointed telemetry runs: frequent
+    enough that --stop-on-converge reacts soon after mixing, coarse enough
+    that each segment accumulates a meaningful number of taps (≥ 16 at the
+    default --trace-every 8) and segment re-entry cost stays negligible."""
+    return cfg.check_every or max(64, 16 * cfg.trace_every)
+
+
+_N_STATE_LEAVES = len(ChainState._fields)
+
+
+def _pack_tree(pack, states, trace):
+    """Checkpoint layout with telemetry: the ChainState leaves first (EXACTLY
+    the pre-telemetry tuple when trace is None), TraceState leaves appended
+    after them — so pre-telemetry snapshots restore through the
+    checkpointer's ``allow_missing`` backfill (the trace leaves come back
+    from the fresh template), the same schema-evolution path the pre-bitmask
+    9-leaf snapshots use."""
+    tree = tuple(pack(states))
+    if trace is not None:
+        tree = tree + tuple(np.asarray(leaf) for leaf in trace)
+    return tree
+
+
+def _unpack_tree(unpack, restored, trace):
+    """Inverse of :func:`_pack_tree`: split the restored tuple back into
+    (ChainState, TraceState | None)."""
+    restored = tuple(jnp.asarray(leaf) for leaf in restored)
+    states = unpack(restored[:_N_STATE_LEAVES])
+    if trace is not None:
+        from ..telemetry import TraceState
+        trace = TraceState(*restored[_N_STATE_LEAVES:])
+    return states, trace
+
+
+def _run_sharded(st, cfg: LearnConfig, key, n: int, collector=None):
     """The production-mesh MCMC path (--sharded): every iteration is ONE
     shard_map program (core/sharded_scoring.sharded_chain_step) — chains DP
     over 'data', score table + cached consistency planes TP over 'model';
-    per iteration only the (window,) pmax/pmin pair crosses ICI. Returns
-    (best_score, best_idx, accepts, delta_window, mask_on)."""
+    per iteration only the (window,) pmax/pmin pair crosses ICI.
+
+    With ``collector`` (telemetry on) the walk is cut into check_every-sized
+    segments carrying a TraceState beside the chain stack; the taps read
+    only per-chain quantities that the engine's own pmax/pmin reduction
+    already replicated, so telemetry adds ZERO collective traffic over the
+    model axis — the collector drains between segments and may stop the run
+    early. Returns (states, delta_window, mask_on, iters_run, stopped)."""
     from ..core.sharded_scoring import (_shard_block, make_sharded_planes_fn,
                                         pad_table, score_order_sharded,
                                         sharded_chain_step)
@@ -316,31 +380,34 @@ def _run_sharded(st, cfg: LearnConfig, key, n: int):
         return score_order_sharded(table, pst, pos, mesh, block=block)
 
     exch = cfg.exchange_every if cfg.chains > 1 else 0
+    telem = collector is not None
+    trace = tap = exchange = None
+    if telem:
+        from ..telemetry import exchange_step_traced, init_trace, make_tap
+        trace = init_trace(cfg.chains, n)
+        tap = make_tap(n, cfg.s, cfg.trace_every)
+        exchange = exchange_step_traced
 
-    @functools.partial(jax.jit, static_argnames=("length",))
-    def run_segment(states, start, *, length):
-        def body(stt, i):
-            stt = sharded_chain_step(stt, table, pst, mesh, cm, block=block,
-                                     window=cfg.window,
-                                     use_kernel=cfg.use_kernel)
-            if exch:
-                stt = jax.lax.cond((start + i + 1) % exch == 0,
-                                   exchange_step, lambda x: x, stt)
-            return stt, None
-        states, _ = jax.lax.scan(body, states, jnp.arange(length))
-        return states
+    def step(stt):
+        return sharded_chain_step(stt, table, pst, mesh, cm, block=block,
+                                  window=cfg.window,
+                                  use_kernel=cfg.use_kernel)
+
+    run_segment = make_traced_segment_runner(step, tap=tap, exchange=exchange,
+                                             exchange_every=exch,
+                                             stacked_step=True)
 
     checkpointed = bool(cfg.checkpoint_every and cfg.checkpoint_dir)
+    seg = cfg.checkpoint_every if checkpointed else \
+        (_auto_check_every(cfg) if telem else cfg.iters)
     with mesh_context(mesh):
         keys = jax.random.split(key, cfg.chains)
         states = jax.vmap(lambda k: init_chain(k, n, score_fn))(keys)
         if mask_on:
             # per-shard plane build: each device packs its own S-shard words
             states = states._replace(mask_planes=splanes_fn(states.pos))
-        if not checkpointed:
-            states = run_segment(states, jnp.int32(0), length=cfg.iters)
-        else:
-            seg = cfg.checkpoint_every
+        pack = unpack = None
+        if checkpointed:
             dummy = jnp.zeros((cfg.chains, 0), jnp.uint32)
             pack = lambda s: jax.tree.map(
                 np.asarray, s._replace(key=jax.random.key_data(s.key),
@@ -349,27 +416,184 @@ def _run_sharded(st, cfg: LearnConfig, key, n: int):
                 key=jax.random.wrap_key_data(jnp.asarray(t[0])))
             done = latest_step(cfg.checkpoint_dir)
             if done is not None:
-                restored, _ = restore_checkpoint(cfg.checkpoint_dir,
-                                                 tuple(pack(states)),
-                                                 step=done, allow_missing=True)
-                states = unpack(jax.tree.map(jnp.asarray, tuple(restored)))
+                restored, _ = restore_checkpoint(
+                    cfg.checkpoint_dir, _pack_tree(pack, states, trace),
+                    step=done, allow_missing=True)
+                states, trace = _unpack_tree(unpack, restored, trace)
                 states = reconcile_mask_planes(states, splanes_fn)
             else:
                 done = 0
-            while done < cfg.iters:
-                states = run_segment(states, jnp.int32(done), length=seg)
-                done += seg
-                save_checkpoint(cfg.checkpoint_dir, done, tuple(pack(states)))
+        else:
+            done = 0
+        stopped = False
+        while done < cfg.iters and not stopped:
+            length = min(seg, cfg.iters - done)
+            states, trace = run_segment(states, trace, jnp.int32(done),
+                                        length=length)
+            done += length
+            if checkpointed:
+                save_checkpoint(cfg.checkpoint_dir, done,
+                                _pack_tree(pack, states, trace))
+            if telem:
+                from ..telemetry import drain
+                rec = collector.check(drain(trace), done)
+                if cfg.stop_on_converge and rec["converged"]:
+                    stopped = True
         jax.block_until_ready(states.best_score)
-        best_score, best_idx, _ = exchange_best(states)
-    return best_score, best_idx, states.accepts.sum(), w, mask_on
+    return states, w, mask_on, done, stopped
+
+
+def _run_segmented(st, cfg: LearnConfig, key, n: int, score_fn, window,
+                   delta_fn, planes_fn, adaptive_ws, delta_fns, burn_in,
+                   collector):
+    """Unified segmented driver for the single-device engines: used whenever
+    the run is checkpointed OR telemetry is on (the two reasons the host
+    must see the walk at sub-run granularity). One jitted segment runner
+    carries (ChainState, TraceState) through the scan; between segments the
+    host snapshots (checkpointing) and/or drains the trace (collector check,
+    which is where --stop-on-converge can cut the run short).
+
+    Returns (stacked states, iters_run, stopped_early)."""
+    telem = collector is not None
+    checkpointed = bool(cfg.checkpoint_every and cfg.checkpoint_dir)
+    C = cfg.chains
+    keys = jax.random.split(key, C)
+    wi0 = len(adaptive_ws) // 2 if adaptive_ws else 0
+    states = jax.vmap(lambda k: init_chain(k, n, score_fn,
+                                           planes_fn=planes_fn,
+                                           win_idx=wi0))(keys)
+    if adaptive_ws:
+        # valid across segments: win_idx/adapt_err/step are ChainState
+        # leaves, so the dual-averaging iterate and the burn-in freeze use
+        # GLOBAL step counts no matter where segment boundaries fall
+        step = lambda s: mcmc_step_adaptive(s, score_fn, delta_fns,
+                                            adaptive_ws, burn_in=burn_in)
+    else:
+        step = lambda s: mcmc_step(s, score_fn, delta_fn, window)
+    exch = cfg.exchange_every if C > 1 else 0
+    trace = tap = exchange = None
+    if telem:
+        from ..telemetry import exchange_step_traced, init_trace, make_tap
+        trace = init_trace(C, n, n_windows=max(len(adaptive_ws), 1))
+        tap = make_tap(n, cfg.s, cfg.trace_every)
+        exchange = exchange_step_traced
+    run_segment = make_traced_segment_runner(step, tap=tap, exchange=exchange,
+                                             exchange_every=exch)
+    seg = cfg.checkpoint_every if checkpointed else _auto_check_every(cfg)
+
+    done = 0
+    pack = unpack = None
+    if checkpointed:
+        # typed PRNG keys are not numpy-serializable: snapshot the key data;
+        # the consistency planes are a pos-derived cache — snapshot a
+        # zero-size stand-in and rebuild after restore (smaller checkpoints,
+        # and pre-tentpole snapshots restore through the same path)
+        dummy_planes = jnp.zeros((C, 0), jnp.uint32)
+        pack = lambda s: jax.tree.map(
+            np.asarray, s._replace(key=jax.random.key_data(s.key),
+                                   mask_planes=dummy_planes))
+        unpack = lambda t: ChainState(*t)._replace(
+            key=jax.random.wrap_key_data(jnp.asarray(t[0])))
+        found = latest_step(cfg.checkpoint_dir)
+        if found is not None:
+            restored, _ = restore_checkpoint(
+                cfg.checkpoint_dir, _pack_tree(pack, states, trace),
+                step=found, allow_missing=True)
+            states, trace = _unpack_tree(unpack, restored, trace)
+            # derived-cache interop: rebuild or reset the planes leaf no
+            # matter which engine variant wrote the snapshot
+            states = reconcile_mask_planes(
+                states, (jax.vmap(planes_fn) if planes_fn is not None
+                         else None))
+            done = found
+
+    stopped = False
+    while done < cfg.iters and not stopped:
+        length = min(seg, cfg.iters - done)
+        states, trace = run_segment(states, trace, jnp.int32(done),
+                                    length=length)
+        done += length
+        if checkpointed:
+            save_checkpoint(cfg.checkpoint_dir, done,
+                            _pack_tree(pack, states, trace))
+        if telem:
+            from ..telemetry import drain
+            rec = collector.check(drain(trace), done)
+            if cfg.stop_on_converge and rec["converged"]:
+                stopped = True
+    return states, done, stopped
+
+
+def _finish(cfg: LearnConfig, st, states, best_score, best_idx, *, window,
+            adaptive_ws, mask_on, sharded, t_pre, cache_hit, auto_pruned,
+            t_iter, iters_run, stopped, collector) -> dict:
+    """Common run epilogue: adjacency decode, per-chain statistics, the
+    result dict, and — with telemetry on — the final trace row. ``states``
+    may be a single un-stacked ChainState (chains == 1 fast paths) or the
+    stacked multi-chain state; per-chain stats use atleast_1d either way."""
+    adj = adjacency_from_ranks(np.asarray(best_idx), s=cfg.s)
+    acc = np.atleast_1d(np.asarray(states.accepts))
+    chain_rates = [float(a) / max(iters_run, 1) for a in acc]
+    if adaptive_ws:
+        wi = np.atleast_1d(np.asarray(states.win_idx))
+        win_hist = np.bincount(np.clip(wi, 0, len(adaptive_ws) - 1),
+                               minlength=len(adaptive_ws)).tolist()
+    else:
+        win_hist = []
+    exch = cfg.exchange_every if cfg.chains > 1 else 0
+    out = {
+        "adjacency": adj,
+        "delta_window": window,       # 0 = full rescore every iteration
+        "adaptive_windows": list(adaptive_ws),
+        "mask_cache": mask_on,
+        "sharded": sharded,
+        "exchange_every": cfg.exchange_every,
+        "exchange_count": (iters_run // exch) if exch else 0,
+        "score": float(best_score),
+        "preprocess_s": t_pre,
+        "preprocess_cache_hit": cache_hit,
+        "auto_pruned": auto_pruned,
+        "iteration_s": t_iter,
+        "per_iteration_s": t_iter / max(iters_run, 1),
+        "accept_rate": float(acc.sum()) / max(iters_run * max(cfg.chains, 1),
+                                              1),
+        "chain_accept_rates": chain_rates,
+        "window_hist": win_hist,      # final per-chain win_idx histogram
+        "iters_run": iters_run,
+        "stopped_early": stopped,
+        "S": st.S,
+        "telemetry": None,
+    }
+    if collector is not None:
+        collector.finalize(iters_run=iters_run, stopped_early=stopped,
+                           best_score=float(best_score))
+        out["telemetry"] = {
+            "run": collector.run,
+            "trace_path": collector.path,
+            "score_rhat": collector.last.get("score_rhat", float("nan")),
+            "edge_rhat": collector.last.get("edge_rhat", float("nan")),
+            "converged": collector.last.get("converged", False),
+            "reseeds": collector.last.get("reseeds", []),
+        }
+    return out
 
 
 def learn_structure(data: np.ndarray, cfg: LearnConfig, *,
                     prior_matrix: np.ndarray | None = None) -> dict:
     """Full pipeline. Returns {adjacency, score, preprocess_s, iteration_s,
-    per_iteration_s, accept_rate}."""
+    per_iteration_s, accept_rate, chain_accept_rates, window_hist,
+    exchange_count, iters_run, stopped_early, telemetry, ...}."""
     n = data.shape[1]
+    telem = cfg.telemetry or cfg.stop_on_converge
+    collector = None
+    if telem:
+        from ..telemetry import Collector
+        collector = Collector(cfg.trace_dir, run_name=cfg.run_name,
+                              rhat_threshold=cfg.rhat_threshold,
+                              patience=cfg.patience,
+                              trace_every=cfg.trace_every)
+        collector.start(config={**asdict(cfg), "n": n,
+                                "m": int(data.shape[0])})
     t0 = time.time()
     cache_hit = False
     prune_delta = cfg.prune_delta if cfg.prune_delta > 0 else None
@@ -393,37 +617,33 @@ def learn_structure(data: np.ndarray, cfg: LearnConfig, *,
     jax.block_until_ready(st.kept_ls if isinstance(st, SparseScoreTable)
                           else st.table)
     t_pre = time.time() - t0
+    if collector is not None:
+        stages = (pre_info.get("stages", {})
+                  if cfg.preprocess == "fused" else {})
+        collector.stage("preprocess", t_pre, cache_hit=cache_hit,
+                        auto_pruned=auto_pruned, **stages)
 
     key = jax.random.key(cfg.seed)
 
     if cfg.sharded:
         t0 = time.time()
-        best_score, best_idx, accepts, window, mask_on = _run_sharded(
-            st, cfg, key, n)
+        states, window, mask_on, iters_run, stopped = _run_sharded(
+            st, cfg, key, n, collector)
         t_iter = time.time() - t0
-        adj = adjacency_from_ranks(np.asarray(best_idx), s=cfg.s)
-        total_prop = cfg.iters * max(cfg.chains, 1)
-        return {
-            "adjacency": adj,
-            "delta_window": window,
-            "adaptive_windows": [],
-            "mask_cache": mask_on,
-            "sharded": True,
-            "exchange_every": cfg.exchange_every,
-            "score": float(best_score),
-            "preprocess_s": t_pre,
-            "preprocess_cache_hit": cache_hit,
-            "auto_pruned": auto_pruned,
-            "iteration_s": t_iter,
-            "per_iteration_s": t_iter / max(cfg.iters, 1),
-            "accept_rate": float(accepts) / max(total_prop, 1),
-            "S": st.S,
-        }
+        best_score, best_idx, _ = exchange_best(states)
+        return _finish(cfg, st, states, best_score, best_idx, window=window,
+                       adaptive_ws=(), mask_on=mask_on, sharded=True,
+                       t_pre=t_pre, cache_hit=cache_hit,
+                       auto_pruned=auto_pruned, t_iter=t_iter,
+                       iters_run=iters_run, stopped=stopped,
+                       collector=collector)
 
     score_fn = make_score_fn(st, cfg)
 
     checkpointed = bool(cfg.checkpoint_every and cfg.checkpoint_dir)
     adaptive_ws: tuple[int, ...] = ()
+    delta_fns: tuple = ()
+    burn_in = 0
     if cfg.adapt_window:
         if checkpointed:
             raise ValueError("--adapt-window does not compose with "
@@ -437,17 +657,21 @@ def learn_structure(data: np.ndarray, cfg: LearnConfig, *,
         burn_in = cfg.burn_in or cfg.iters // 5
     else:
         window, delta_fn, planes_fn = make_delta_fn(st, cfg)
+    mask_on = isinstance(delta_fn, BitmaskDelta) or \
+        (cfg.adapt_window and planes_fn is not None)
 
+    iters_run, stopped = cfg.iters, False
     t0 = time.time()
-    if not checkpointed:
+    if not checkpointed and not telem:
+        # fast paths: the whole walk is ONE jitted program, no segmentation
         if cfg.adapt_window:
             if cfg.chains == 1:
                 state, _ = mcmc_run_adaptive(
                     key, n, score_fn, cfg.iters, windows=adaptive_ws,
                     delta_fns=delta_fns, planes_fn=planes_fn,
                     burn_in=burn_in)
+                states = state
                 best_score, best_idx = state.best_score, state.best_idx
-                accepts = state.accepts
             else:
                 states = mcmc_run_chains_adaptive(
                     key, cfg.chains, n, score_fn, cfg.iters,
@@ -455,97 +679,35 @@ def learn_structure(data: np.ndarray, cfg: LearnConfig, *,
                     planes_fn=planes_fn, burn_in=burn_in,
                     exchange_every=cfg.exchange_every)
                 best_score, best_idx, _ = exchange_best(states)
-                accepts = states.accepts.sum()
         elif cfg.chains == 1:
             state, _ = mcmc_run(key, n, score_fn, cfg.iters,
                                 delta_fn=delta_fn, window=window,
                                 planes_fn=planes_fn)
+            states = state
             best_score, best_idx = state.best_score, state.best_idx
-            accepts = state.accepts
         else:
             states = mcmc_run_chains(key, cfg.chains, n, score_fn, cfg.iters,
                                      delta_fn=delta_fn, window=window,
                                      exchange_every=cfg.exchange_every,
                                      planes_fn=planes_fn)
             best_score, best_idx, _ = exchange_best(states)
-            accepts = states.accepts.sum()
-        jax.block_until_ready(best_score)
     else:
-        # checkpointed path: segment the walk, snapshot between segments
-        seg = cfg.checkpoint_every
-        keys = jax.random.split(key, cfg.chains)
-        states = jax.vmap(
-            lambda k: init_chain(k, n, score_fn, planes_fn=planes_fn))(keys)
-        # typed PRNG keys are not numpy-serializable: snapshot the key data;
-        # the consistency planes are a pos-derived cache — snapshot a
-        # zero-size stand-in and rebuild after restore (smaller checkpoints,
-        # and pre-tentpole 9-leaf snapshots restore through the same path)
-        dummy_planes = jnp.zeros((cfg.chains, 0), jnp.uint32)
-        pack = lambda st: jax.tree.map(
-            np.asarray, st._replace(key=jax.random.key_data(st.key),
-                                    mask_planes=dummy_planes))
-        unpack = lambda t: ChainState(*t)._replace(
-            key=jax.random.wrap_key_data(jnp.asarray(t[0])))
-        done = latest_step(cfg.checkpoint_dir)
-        if done is not None:
-            restored, _ = restore_checkpoint(cfg.checkpoint_dir,
-                                             tuple(pack(states)), step=done,
-                                             allow_missing=True)
-            states = unpack(jax.tree.map(jnp.asarray, tuple(restored)))
-            # derived-cache interop: rebuild or reset the planes leaf no
-            # matter which engine variant wrote the snapshot
-            states = reconcile_mask_planes(
-                states, (jax.vmap(planes_fn) if planes_fn is not None
-                         else None))
-        else:
-            done = 0
-
-        exch = cfg.exchange_every if cfg.chains > 1 else 0
-
-        @jax.jit
-        def run_segment(states, start):
-            def body(st, i):
-                st = jax.vmap(
-                    lambda s: mcmc_step(s, score_fn, delta_fn, window))(st)
-                if exch:
-                    # honor the REQUESTED exchange period across segment and
-                    # restart boundaries: `start` is the global iteration
-                    # offset, so the cadence survives checkpoint resume
-                    st = jax.lax.cond((start + i + 1) % exch == 0,
-                                      exchange_step, lambda s: s, st)
-                return st, None
-            states, _ = jax.lax.scan(body, states, jnp.arange(seg))
-            return states
-
-        while done < cfg.iters:
-            states = run_segment(states, jnp.int32(done))
-            done += seg
-            save_checkpoint(cfg.checkpoint_dir, done, tuple(pack(states)))
+        # segmented path: checkpointing and/or telemetry need the host
+        # between scan segments (snapshots, collector checks, early stop)
+        states, iters_run, stopped = _run_segmented(
+            st, cfg, key, n, score_fn, window, delta_fn,
+            planes_fn, adaptive_ws, delta_fns, burn_in, collector)
         best_score, best_idx, _ = exchange_best(states)
-        accepts = states.accepts.sum()
+    jax.block_until_ready(best_score)
     t_iter = time.time() - t0
 
     # rank-decoded adjacency (Algorithm 2 in reverse): identical to the old
     # PST row lookup, but works from the O(n*K) pruned representation too
-    adj = adjacency_from_ranks(np.asarray(best_idx), s=cfg.s)
-    total_prop = cfg.iters * max(cfg.chains, 1)
-    return {
-        "adjacency": adj,
-        "delta_window": window,       # 0 = full rescore every iteration
-        "adaptive_windows": list(adaptive_ws),
-        "mask_cache": isinstance(delta_fn, BitmaskDelta) or
-                      (cfg.adapt_window and planes_fn is not None),
-        "sharded": False,
-        "exchange_every": cfg.exchange_every,
-        "score": float(best_score),
-        "preprocess_s": t_pre,
-        "preprocess_cache_hit": cache_hit,
-        "auto_pruned": auto_pruned,
-        "iteration_s": t_iter,
-        "per_iteration_s": t_iter / max(cfg.iters, 1),
-        "accept_rate": float(accepts) / max(total_prop, 1),
-        "S": st.S,
-    }
+    return _finish(cfg, st, states, best_score, best_idx, window=window,
+                   adaptive_ws=adaptive_ws, mask_on=mask_on, sharded=False,
+                   t_pre=t_pre, cache_hit=cache_hit, auto_pruned=auto_pruned,
+                   t_iter=t_iter, iters_run=iters_run, stopped=stopped,
+                   collector=collector)
 
 
 def _network_data(name: str, m: int, q: int, seed: int, n_synth: int = 64):
@@ -615,6 +777,27 @@ def main(argv=None) -> dict:
                          "only consulted with --preprocess fused")
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--telemetry", action="store_true",
+                    help="convergence telemetry: in-scan chain traces + "
+                         "host-side split-R̂/edge-R̂ checks, appended as "
+                         "schema-versioned JSONL under --trace-dir")
+    ap.add_argument("--trace-every", type=int, default=8,
+                    help="telemetry tap cadence in iterations (ring writes "
+                         "+ thinned posterior adjacency samples)")
+    ap.add_argument("--check-every", type=int, default=0,
+                    help="collector check period (0 = auto: max(64, 16 * "
+                         "trace_every); checkpointed runs check at "
+                         "checkpoint boundaries)")
+    ap.add_argument("--stop-on-converge", action="store_true",
+                    help="stop early once split-R̂ AND edge-marginal R̂ stay "
+                         "below --rhat-threshold for --patience consecutive "
+                         "checks (implies --telemetry)")
+    ap.add_argument("--rhat-threshold", type=float, default=1.05)
+    ap.add_argument("--patience", type=int, default=3)
+    ap.add_argument("--trace-dir", default="experiments/runs",
+                    help="JSONL trace directory for --telemetry")
+    ap.add_argument("--run-name", default="",
+                    help="trace file stem ('' = timestamped)")
     args = ap.parse_args(argv)
 
     truth, data = _network_data(args.network, args.samples, args.q, args.seed,
@@ -647,7 +830,15 @@ def main(argv=None) -> dict:
                       cache_dir=(args.cache_dir if args.preprocess == "fused"
                                  else ""),
                       checkpoint_dir=args.checkpoint_dir,
-                      checkpoint_every=args.checkpoint_every)
+                      checkpoint_every=args.checkpoint_every,
+                      telemetry=args.telemetry,
+                      trace_every=args.trace_every,
+                      check_every=args.check_every,
+                      stop_on_converge=args.stop_on_converge,
+                      rhat_threshold=args.rhat_threshold,
+                      patience=args.patience,
+                      trace_dir=args.trace_dir,
+                      run_name=args.run_name)
     out = learn_structure(data, cfg)
     fp, tp = roc_point(out["adjacency"], truth)
     out["tp_rate"], out["fp_rate"] = tp, fp
@@ -677,6 +868,22 @@ def main(argv=None) -> dict:
           f"iter={out['iteration_s']:.2f}s "
           f"({out['per_iteration_s']*1e3:.2f} ms/it, {mode}, "
           f"accept={out['accept_rate']:.2f})")
+    # one-line run summary: per-chain mixing at a glance
+    rates = " ".join(f"{r:.2f}" for r in out["chain_accept_rates"])
+    summary = f"chains: accept=[{rates}]"
+    if out["window_hist"]:
+        summary += f" win_hist={out['window_hist']}"
+    if out["exchange_count"]:
+        summary += f" exchanges={out['exchange_count']}"
+    tele = out.get("telemetry")
+    if tele is not None:
+        summary += (f" | R̂(score)={tele['score_rhat']:.3f} "
+                    f"R̂(edges)={tele['edge_rhat']:.3f}")
+        if out["stopped_early"]:
+            summary += (f" — converged, stopped at "
+                        f"{out['iters_run']}/{args.iters} iters")
+        summary += f" → {tele['trace_path']}"
+    print(summary)
     return out
 
 

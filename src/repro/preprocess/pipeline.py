@@ -41,9 +41,13 @@ where the dense intermediate alone is ~1.6 GB.
 
 With ``return_info=True`` the info dict has the SAME schema on cache hit and
 miss: {cache_hit, n, S, plan, preprocess_s, streaming,
-peak_assembly_bytes}. ``plan`` is None on a cache hit (no sharding was
-planned), a {n_chunks, n_devices, imbalance} dict otherwise;
+peak_assembly_bytes, stages}. ``plan`` is None on a cache hit (no sharding
+was planned), a {n_chunks, n_devices, imbalance} dict otherwise;
 ``peak_assembly_bytes`` is None unless the streaming assembly ran.
+``stages`` breaks ``preprocess_s`` into per-stage wall-clock seconds
+(plan_s/score_s/assemble_s on the dense path, plan_s/stream_s/finalize_s
+streaming, cache_load_s/cache_store_s around the disk cache) — the
+telemetry collector (launch/bn_learn --telemetry) emits them as stage rows.
 """
 from __future__ import annotations
 
@@ -173,9 +177,11 @@ def build_score_table_fused(data: np.ndarray, *, q: int, s: int,
     streaming = bool(streaming) and prune_delta is not None
 
     S = n_parent_sets(n - 1, s)
+    # "stages" is the per-stage wall-clock breakdown of preprocess_s — the
+    # telemetry collector's stage rows (launch/bn_learn) read it verbatim
     info: dict = {"cache_hit": False, "n": n, "S": S, "plan": None,
                   "preprocess_s": None, "streaming": streaming,
-                  "peak_assembly_bytes": None}
+                  "peak_assembly_bytes": None, "stages": {}}
     log_gamma = float(np.log(gamma))
     expect = {"q": q, "s": s, "m": m, "n": n,
               "gamma": float(gamma), "ess": float(ess)}
@@ -199,12 +205,14 @@ def build_score_table_fused(data: np.ndarray, *, q: int, s: int,
                     kept_idx, kept_ls, kept_parents,
                     q=q, s=s, delta=prune_delta, S=S)
                 info.update(cache_hit=True, preprocess_s=time.time() - t0)
+                info["stages"]["cache_load_s"] = info["preprocess_s"]
                 return (sp, info) if return_info else sp
         cached = load_cached_table(cache_dir, key, expect=expect)
         if cached is not None:
             table_np, pst_c, psz_c = cached
             info.update(cache_hit=True, streaming=False,
                         preprocess_s=time.time() - t0)
+            info["stages"]["cache_load_s"] = info["preprocess_s"]
             st = ScoreTable(jnp.asarray(table_np), np.asarray(pst_c),
                             np.asarray(psz_c), q, s)
             if prune_delta is not None:
@@ -222,8 +230,10 @@ def build_score_table_fused(data: np.ndarray, *, q: int, s: int,
         info["plan"] = {k: sinfo[k] for k in
                         ("n_chunks", "n_devices", "imbalance")}
         info["peak_assembly_bytes"] = sinfo["peak_assembly_bytes"]
+        info["stages"].update(sinfo.get("stages", {}))
         info["preprocess_s"] = time.time() - t0
         if cache_dir:
+            t_store = time.time()
             store_cached_sparse(
                 cache_dir, skey or cache_key(
                     data, q=q, s=s, gamma=gamma, ess=ess,
@@ -233,9 +243,11 @@ def build_score_table_fused(data: np.ndarray, *, q: int, s: int,
                 np.asarray(sp.kept_parents),
                 metadata={**expect, "prune_delta": float(prune_delta),
                           "max_keep": max_keep, "S": S})
+            info["stages"]["cache_store_s"] = time.time() - t_store
         return (sp, info) if return_info else sp
 
     # ---- dense assembly -------------------------------------------------
+    t_plan = time.time()
     pst, psizes = build_pst(n - 1, s)
 
     # plan: column subsets, chunked + cost-sharded (paper §III-B)
@@ -249,6 +261,8 @@ def build_score_table_fused(data: np.ndarray, *, q: int, s: int,
     plan = plan_preprocess(ssz_p, chunk, m, q, len(devices))
     info["plan"] = {"n_chunks": plan.n_chunks, "n_devices": plan.n_devices,
                     "imbalance": plan.imbalance}
+    info["stages"]["plan_s"] = time.time() - t_plan
+    t_score = time.time()
 
     # execute: one jitted scan per device over its chunks
     data_ext = np.concatenate([data, np.zeros((m, 1), np.int32)], axis=1)
@@ -274,6 +288,8 @@ def build_score_table_fused(data: np.ndarray, *, q: int, s: int,
         for u, ci in enumerate(ids):                       # dupes: same data
             TI[ci * chunk:(ci + 1) * chunk] = out[u]
     TI = jnp.asarray(TI[:Csub])
+    info["stages"]["score_s"] = time.time() - t_score
+    t_asm = time.time()
 
     # assemble: rank-gather + structure penalty (+ prior)
     rmap = _rank_map(n, s, pst, psizes)
@@ -282,13 +298,18 @@ def build_score_table_fused(data: np.ndarray, *, q: int, s: int,
         from ..core.priors import prior_table
         table = table + prior_table(jnp.asarray(prior_matrix, jnp.float32),
                                     jnp.asarray(pst), n)
+    info["stages"]["assemble_s"] = time.time() - t_asm
     info["preprocess_s"] = time.time() - t0
 
     if cache_dir:
+        t_store = time.time()
         store_cached_table(cache_dir, key, np.asarray(table), pst, psizes,
                            metadata={**expect, "kind": "dense"})
+        info["stages"]["cache_store_s"] = time.time() - t_store
 
     st = ScoreTable(table, pst, psizes, q, s)
     if prune_delta is not None:
+        t_prune = time.time()
         st = prune_table(st, prune_delta)
+        info["stages"]["prune_s"] = time.time() - t_prune
     return (st, info) if return_info else st

@@ -41,6 +41,7 @@ set exceeds ``max_keep``.
 """
 from __future__ import annotations
 
+import time
 from collections import deque
 
 import jax
@@ -159,11 +160,14 @@ def build_sparse_table_streaming(
     lists AND hash arrays) while never allocating an (n, S)-sized array.
 
     stream_info: {"peak_assembly_bytes", "n_chunks", "n_devices",
-    "imbalance", "kept_entries", "K"}.
+    "imbalance", "kept_entries", "K", "stages"} — ``stages`` breaks the
+    wall-clock into {plan_s, stream_s, finalize_s} for the telemetry
+    collector's stage rows.
     """
     from .fused import score_luts
     from .pipeline import _run_device
 
+    t_plan = time.time()
     data = np.asarray(data, dtype=np.int32)
     m, n = data.shape
     S = n_parent_sets(n - 1, s)
@@ -244,6 +248,8 @@ def build_sparse_table_streaming(
             partials[d].compact(best, delta, max_keep)
 
     # ---- dispatch: round-robin over the LPT buckets, bounded in-flight
+    t_stream = time.time()
+    plan_s = t_stream - t_plan
     schedule = []
     width = max(len(b) for b in plan.device_chunks)
     for r in range(width):
@@ -266,6 +272,8 @@ def build_sparse_table_streaming(
         merge_chunk(dd, cc_, np.asarray(fut)[0])
 
     # ---- one merge at the end: final threshold, pack, hash
+    t_final = time.time()
+    stream_s = t_final - t_stream
     node = np.concatenate([np.concatenate(p.node) if p.node else
                            np.empty(0, np.int32) for p in partials])
     rank = np.concatenate([np.concatenate(p.rank) if p.rank else
@@ -301,5 +309,7 @@ def build_sparse_table_streaming(
                                     q=q, s=s, delta=delta, S=S)
     info = {"peak_assembly_bytes": int(peak), "n_chunks": plan.n_chunks,
             "n_devices": plan.n_devices, "imbalance": plan.imbalance,
-            "kept_entries": int(counts.sum()) + n, "K": K}
+            "kept_entries": int(counts.sum()) + n, "K": K,
+            "stages": {"plan_s": plan_s, "stream_s": stream_s,
+                       "finalize_s": time.time() - t_final}}
     return sp, info

@@ -1,0 +1,193 @@
+"""Host-side telemetry collector: drains the in-scan taps between segments,
+computes convergence diagnostics, emits schema-valid JSONL, and votes on
+early stopping.
+
+The collector is deliberately dumb about devices: it only ever sees the
+numpy snapshot from :func:`taps.drain`, so it works identically for the
+single-device, checkpointed and sharded run loops — the run loop decides
+WHEN to check (every ``--check-every`` iterations, between jitted
+segments), the collector decides WHAT it means.
+
+Stopping rule (``--stop-on-converge``): a check PASSES when both split-R̂
+on the per-chain score traces and max-R̂ over the cross-chain edge
+marginals are below ``rhat_threshold`` (and enough taps exist for either to
+be meaningful). ``patience`` consecutive passes are required before
+``converged`` flips — one lucky segment is not mixing; R̂ dipping under the
+bar and climbing back out resets the vote. Runs then stop on convergence,
+not on the iteration cap (the cap stays as the upper bound).
+
+Stuck/diverged flags reuse the WandbLog rolling-median idea across the
+chain axis: a chain whose segment accept rate or score sits many MADs from
+the chain-population median is flagged (stuck chains are also flagged
+absolutely at ~zero acceptance). Flags are REPORTS, not actions — the
+in-scan ``exchange_step`` already re-seeds the worst chain on its own
+cadence; the flags make that machinery observable (reseeds per slot are
+counted right in the trace) and give the straggler runtime an external
+signal to act on.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+import uuid
+
+import numpy as np
+
+from .rhat import edge_rhat, median_outliers, split_rhat
+from .schema import SCHEMA, validate_row, write_rows
+
+__all__ = ["Collector", "host_meta"]
+
+_STUCK_ACCEPT = 1e-3      # absolute floor: a chain accepting ~nothing is stuck
+
+
+def host_meta() -> dict:
+    """Machine identity recorded in the meta row (and, via
+    benchmarks/common.py, in every bench row): enough to tell a 1-vCPU CI
+    smoke from a multi-core gate box when reading trajectories later."""
+    import jax
+    devs = jax.devices()
+    return {
+        "backend": jax.default_backend(),
+        "device_kind": devs[0].device_kind if devs else "unknown",
+        "n_devices": len(devs),
+        "cpu_count": os.cpu_count() or 1,
+    }
+
+
+class Collector:
+    """One instance per run; owns the trace file and the convergence vote."""
+
+    def __init__(self, trace_dir: str, *, run_name: str = "",
+                 rhat_threshold: float = 1.05, patience: int = 3,
+                 trace_every: int = 8, min_taps: int = 16,
+                 spike_mad: float = 4.0):
+        self.run = run_name or time.strftime("run_%Y%m%d_%H%M%S_") \
+            + uuid.uuid4().hex[:6]
+        self.path = os.path.join(trace_dir, f"{self.run}.jsonl")
+        self.rhat_threshold = float(rhat_threshold)
+        self.patience = max(int(patience), 1)
+        self.trace_every = max(int(trace_every), 1)
+        self.min_taps = max(int(min_taps), 4)
+        self.spike_mad = float(spike_mad)
+        self.hits = 0
+        self.last: dict = {}
+        self._prev_accepts: np.ndarray | None = None
+        self._prev_iter = 0
+
+    # ------------------------------------------------------------- emission
+    def _emit(self, row: dict) -> None:
+        row = {"schema": SCHEMA, "ts": time.time(), **row}
+        validate_row(row)
+        write_rows(self.path, [row])
+
+    def start(self, config: dict) -> None:
+        # A run name OWNS its trace file: starting a run truncates any stale
+        # trace from an earlier run that reused the name (e.g. a re-run CI
+        # smoke, or a retried acceptance run). Without this the appended
+        # second meta/final pair fails the single-run validation contract.
+        d = os.path.dirname(self.path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        open(self.path, "w").close()
+        self._emit({"kind": "meta", "run": self.run,
+                    "config": _jsonable(config), "host": host_meta()})
+
+    def stage(self, stage: str, seconds: float, **extra) -> None:
+        """One timed pipeline stage (preprocess plan/score/assemble, compile,
+        ...) — the run's flame graph, one row per stage."""
+        self._emit({"kind": "stage", "run": self.run, "stage": stage,
+                    "seconds": float(seconds), **_jsonable(extra)})
+
+    # ---------------------------------------------------------------- check
+    def check(self, snap: dict, it: int) -> dict:
+        """Analyse one drained trace snapshot at global iteration ``it``.
+
+        Returns the segment record (also appended to the JSONL trace), with
+        ``converged`` reflecting the patience-gated vote."""
+        scores = np.asarray(snap["scores"], np.float64)       # (C, L) ordered
+        C, L = scores.shape
+
+        # --- per-chain accept rate over THIS segment (cumulative diff)
+        acc_now = (np.asarray(snap["accepts"][:, -1], np.float64)
+                   if L else np.zeros(C))
+        prev = (self._prev_accepts if self._prev_accepts is not None
+                else np.zeros(C))
+        d_iter = max(it - self._prev_iter, 1)
+        seg_accept = (acc_now - prev) / d_iter
+        self._prev_accepts, self._prev_iter = acc_now, it
+
+        # --- diagnostics
+        score_rhat = split_rhat(scores) if L >= 4 else float("nan")
+        e_rhat, _ = edge_rhat(snap["edge_counts"], snap["edge_taps"])
+        # score jump per chain over the segment window (for divergence flags)
+        jumps = (scores[:, -1] - scores[:, 0]) if L >= 2 else np.zeros(C)
+
+        stuck = median_outliers(seg_accept, self.spike_mad, floor=0.02) \
+            & (seg_accept < np.median(seg_accept))
+        stuck |= seg_accept < _STUCK_ACCEPT
+        diverged = median_outliers(jumps, self.spike_mad,
+                                   floor=max(np.abs(jumps).max(initial=0.0)
+                                             * 0.05, 1e-6)) \
+            & (jumps < np.median(jumps))
+
+        # --- patience-gated convergence vote
+        enough = snap["taps"] >= self.min_taps
+        ok = (enough and np.isfinite(score_rhat)
+              and score_rhat < self.rhat_threshold
+              and (C < 2 or (np.isfinite(e_rhat)
+                             and e_rhat < self.rhat_threshold)))
+        self.hits = self.hits + 1 if ok else 0
+        converged = self.hits >= self.patience
+
+        rec = {
+            "kind": "segment", "run": self.run, "iter": int(it),
+            "taps": int(snap["taps"]),
+            "score_mean": float(scores.mean()) if L else float("nan"),
+            "score_last": [float(x) for x in (scores[:, -1] if L
+                                              else np.zeros(C))],
+            "score_rhat": float(score_rhat),
+            "edge_rhat": float(e_rhat),
+            "edge_samples": int(snap["edge_taps"]),
+            "accept_rates": [float(x) for x in seg_accept],
+            "win_hist": np.asarray(snap["win_hist"]).tolist(),
+            "reseeds": np.asarray(snap["reseeds"]).tolist(),
+            "stuck_chains": [int(i) for i in np.nonzero(stuck)[0]],
+            "diverged_chains": [int(i) for i in np.nonzero(diverged)[0]],
+            "converge_hits": int(self.hits),
+            "converged": bool(converged),
+        }
+        self._emit(rec)
+        self.last = rec
+        return rec
+
+    def finalize(self, *, iters_run: int, stopped_early: bool,
+                 **extra) -> dict:
+        rec = {"kind": "final", "run": self.run, "iters_run": int(iters_run),
+               "stopped_early": bool(stopped_early),
+               "score_rhat": float(self.last.get("score_rhat", float("nan"))),
+               "edge_rhat": float(self.last.get("edge_rhat", float("nan"))),
+               **_jsonable(extra)}
+        self._emit(rec)
+        return rec
+
+
+def _jsonable(obj):
+    """Round-trip through json-compatible types (numpy scalars/arrays ->
+    python), dropping anything that still refuses to serialise."""
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    if isinstance(obj, (np.floating, np.integer, np.bool_)):
+        return obj.item()
+    if isinstance(obj, (str, int, float, bool)) or obj is None:
+        return obj
+    try:
+        json.dumps(obj)
+        return obj
+    except TypeError:
+        return str(obj)

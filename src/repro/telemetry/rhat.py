@@ -1,0 +1,126 @@
+"""Cross-chain convergence diagnostics (host side).
+
+Two R̂ statistics drive the ``--stop-on-converge`` rule:
+
+* :func:`split_rhat` — the Gelman–Rubin potential scale reduction factor on
+  the per-chain SCORE traces, with each chain split in half (Vehtari et al.
+  2021's split-R̂: halving catches within-chain drift that whole-chain R̂
+  hides). Scores are the one scalar the sampler already computes every
+  iteration, so this costs nothing on device.
+* :func:`edge_rhat` — max-R̂ over POSTERIOR EDGE MARGINALS: per-chain edge
+  frequencies from the thinned adjacency accumulator, compared across
+  chains. This is the Kuipers & Moffa (1803.07859) criterion — judge the
+  sampler by concordance of edge posteriors across independent chains, not
+  by score alone: two chains can sit at the same score in different basins,
+  which score-R̂ misses and edge-R̂ catches.
+
+Both return inf for frozen-apart chains (zero within-variance, nonzero
+between-variance) and 1.0 for bit-identical chains; the stopping rule only
+fires when BOTH drop below the threshold for ``patience`` consecutive
+checks.
+
+Rolling-median spike detection (:func:`median_outliers`) follows the
+HomebrewNLP WandbLog pattern: compare each value against the median of its
+peer set and flag deviations beyond a MAD multiple — robust to the one
+stuck/diverged chain it is trying to find.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["split_rhat", "edge_rhat", "median_outliers"]
+
+_EPS = 1e-12
+
+
+def _psrf(means: np.ndarray, wvars: np.ndarray, length: float) -> float:
+    """Potential scale reduction factor from per-chain (mean, within-var)
+    summaries of `length` draws each. Degenerate cases: no spread anywhere
+    -> 1.0 (converged and frozen together); between-spread with ZERO
+    within-variance -> inf (frozen apart — never report converged)."""
+    w = float(np.mean(wvars))
+    b = float(np.var(means, ddof=1)) * length    # between-chain variance * L
+    if b <= _EPS and w <= _EPS:
+        return 1.0
+    if w <= _EPS:
+        return float("inf")
+    var_plus = (length - 1.0) / length * w + b / length
+    return float(np.sqrt(var_plus / w))
+
+
+def split_rhat(traces: np.ndarray) -> float:
+    """Split-R̂ over (C, L) per-chain scalar traces.
+
+    Each chain is halved -> 2C sequences of length L//2; R̂ is the PSRF over
+    those. Returns nan when there is too little data (L < 4) and inf when
+    chains are frozen at different values.
+    """
+    traces = np.asarray(traces, dtype=np.float64)
+    if traces.ndim != 2:
+        raise ValueError(f"traces must be (chains, length), got {traces.shape}")
+    C, L = traces.shape
+    half = L // 2
+    if half < 2:
+        return float("nan")
+    halves = np.concatenate([traces[:, :half], traces[:, L - half:]], axis=0)
+    return _psrf(halves.mean(axis=1), halves.var(axis=1, ddof=1), float(half))
+
+
+def edge_rhat(edge_counts: np.ndarray, n_samples: int,
+              min_disagreement: float = 0.0) -> tuple[float, np.ndarray]:
+    """(max R̂, per-edge R̂ matrix) over per-chain edge marginals.
+
+    edge_counts: (C, n, n) — per-chain counts of edge (parent, child) over
+    ``n_samples`` thinned samples. Within-chain variance of an edge
+    indicator stream with frequency p is the Bernoulli sample variance
+    p(1-p)·N/(N-1); the between term is the cross-chain variance of the
+    per-chain frequencies — exactly the PSRF recipe with the indicator
+    series summarised by its sufficient statistic, which is all the
+    accumulator keeps (O(n²) per chain instead of O(n²·samples)).
+
+    Unanimous-in-every-chain edges (all frequencies exactly 0 or exactly 1,
+    and equal) have zero within- AND between-variance: R̂ = 1 by the
+    degenerate rule — a hard edge every chain agrees on is converged.
+    Chains unanimous at DIFFERENT values (one says always, another never)
+    get R̂ = inf. ``min_disagreement`` optionally ignores edges whose
+    cross-chain frequency range is below it (measurement noise floor).
+
+    Returns (nan, empty) when n_samples < 2 or there is a single chain.
+    """
+    counts = np.asarray(edge_counts, dtype=np.float64)
+    if counts.ndim != 3 or counts.shape[1] != counts.shape[2]:
+        raise ValueError(f"edge_counts must be (C, n, n), got {counts.shape}")
+    C, n, _ = counts.shape
+    if C < 2 or n_samples < 2:
+        return float("nan"), np.full((n, n), np.nan)
+    N = float(n_samples)
+    p = counts / N                                       # (C, n, n)
+    off = ~np.eye(n, dtype=bool)
+    w = (p * (1.0 - p) * N / (N - 1.0)).mean(axis=0)     # (n, n)
+    b = p.var(axis=0, ddof=1) * N
+    var_plus = (N - 1.0) / N * w + b / N
+    with np.errstate(divide="ignore", invalid="ignore"):
+        rhat = np.sqrt(var_plus / w)
+    rhat = np.where((b <= _EPS) & (w <= _EPS), 1.0, rhat)
+    rhat = np.where((w <= _EPS) & (b > _EPS), np.inf, rhat)
+    spread = p.max(axis=0) - p.min(axis=0)
+    rhat = np.where(off & (spread >= min_disagreement), rhat, 1.0)
+    return float(rhat.max(initial=1.0)), rhat
+
+
+def median_outliers(values: np.ndarray, threshold: float = 4.0,
+                    floor: float = 0.0) -> np.ndarray:
+    """Boolean mask of entries deviating > threshold MADs from the median.
+
+    The WandbLog-style robust spike detector, applied across the CHAIN axis:
+    the median/MAD of the healthy majority defines normal, so one stuck or
+    diverged chain cannot drag the baseline toward itself (a mean/std
+    detector would). ``floor`` bounds the MAD from below so a near-constant
+    healthy population doesn't flag harmless jitter."""
+    values = np.asarray(values, dtype=np.float64)
+    if values.size < 3:                       # no robust majority to speak of
+        return np.zeros(values.shape, dtype=bool)
+    med = np.median(values)
+    mad = np.median(np.abs(values - med))
+    scale = max(1.4826 * mad, floor, _EPS)    # 1.4826: MAD -> sigma, normal
+    return np.abs(values - med) > threshold * scale

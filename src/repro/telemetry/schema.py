@@ -1,0 +1,97 @@
+"""Versioned JSONL trace schema for convergence telemetry.
+
+Every run with ``--telemetry`` appends one JSON object per line to a trace
+file under ``--trace-dir`` (default ``experiments/runs/``). The file is a
+TRAJECTORY, like the repo-root ``BENCH_*.json`` files: rows are append-only,
+self-describing (every row carries ``schema`` + ``kind``), and validated
+both at write time (the collector refuses to emit a malformed row) and in CI
+(``python -m repro.telemetry.validate <file...>`` re-validates the emitted
+file after an end-to-end ``bn_learn --telemetry`` run).
+
+Row kinds
+---------
+
+* ``meta``    — one per run, first row: run id, config echo, host metadata.
+* ``stage``   — one per timed pipeline stage (preprocess plan/score/assemble,
+  MCMC compile, ...): {stage, seconds}.
+* ``segment`` — one per collector check (every ``--check-every`` iterations):
+  per-chain score/accept stats, split-R̂ on the score traces, max-R̂ over
+  edge marginals, stuck/diverged chain flags, convergence-vote state.
+* ``final``   — one per run, last row: outcome summary (stopped_early,
+  iters_run, final R̂s, best score).
+
+Schema evolution: bump :data:`SCHEMA` when a required field changes meaning
+or disappears; ADDING optional fields is allowed within a version (readers
+must ignore unknown keys — the same contract as the bench trajectories).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+__all__ = ["SCHEMA", "REQUIRED", "validate_row", "write_rows", "read_rows"]
+
+SCHEMA = "bn-telemetry/v1"
+
+# required fields (and their types) per row kind; every row additionally
+# needs schema == SCHEMA and a known kind
+_NUM = (int, float)
+REQUIRED: dict[str, dict[str, type | tuple]] = {
+    "meta": {"run": str, "config": dict, "host": dict},
+    "stage": {"run": str, "stage": str, "seconds": _NUM},
+    "segment": {"run": str, "iter": int, "taps": int,
+                "score_mean": _NUM, "score_rhat": _NUM,
+                "edge_rhat": _NUM, "accept_rates": list,
+                "stuck_chains": list, "diverged_chains": list,
+                "converge_hits": int, "converged": bool},
+    "final": {"run": str, "iters_run": int, "stopped_early": bool,
+              "score_rhat": _NUM, "edge_rhat": _NUM},
+}
+
+
+def validate_row(row) -> None:
+    """Raise ValueError unless ``row`` is a valid row of the CURRENT schema.
+
+    NaN/inf are valid numeric values (R̂ is inf for frozen disjoint chains,
+    nan before enough taps exist) — the JSON writer emits them as
+    ``NaN``/``Infinity`` (Python's json dialect), and :func:`read_rows`
+    parses them back.
+    """
+    if not isinstance(row, dict):
+        raise ValueError(f"telemetry row must be a dict, got {type(row)}")
+    if row.get("schema") != SCHEMA:
+        raise ValueError(f"row schema {row.get('schema')!r} != {SCHEMA!r}")
+    kind = row.get("kind")
+    if kind not in REQUIRED:
+        raise ValueError(f"unknown row kind {kind!r} "
+                         f"(expected one of {sorted(REQUIRED)})")
+    for field, typ in REQUIRED[kind].items():
+        if field not in row:
+            raise ValueError(f"{kind} row missing required field {field!r}")
+        if not isinstance(row[field], typ):
+            raise ValueError(
+                f"{kind} row field {field!r} has type "
+                f"{type(row[field]).__name__}, expected {typ}")
+
+
+def write_rows(path: str, rows: list[dict]) -> None:
+    """Validate and append rows to a JSONL trace file (creates parents)."""
+    for row in rows:
+        validate_row(row)
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "a") as f:
+        for row in rows:
+            f.write(json.dumps(row, default=float) + "\n")
+
+
+def read_rows(path: str) -> list[dict]:
+    """Parse a JSONL trace file (no validation — pair with validate_row)."""
+    rows = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                rows.append(json.loads(line))
+    return rows

@@ -1,0 +1,66 @@
+"""Validate emitted JSONL trace files against the current schema.
+
+CLI (used by the CI telemetry smoke step after an end-to-end
+``bn_learn --telemetry`` run):
+
+    python -m repro.telemetry.validate experiments/runs/run_*.jsonl
+
+Exits non-zero on the first malformed row; prints a per-file row-count
+summary otherwise. Also enforces the file-level shape: the first row must
+be ``meta``, at most one ``final`` row, and every row must belong to the
+same run id.
+"""
+from __future__ import annotations
+
+import sys
+
+from .schema import read_rows, validate_row
+
+__all__ = ["validate_file", "main"]
+
+
+def validate_file(path: str) -> dict:
+    """Validate one trace file; returns {kinds: {kind: count}, run}."""
+    rows = read_rows(path)
+    if not rows:
+        raise ValueError(f"{path}: empty trace file")
+    kinds: dict[str, int] = {}
+    run = None
+    for i, row in enumerate(rows):
+        try:
+            validate_row(row)
+        except ValueError as e:
+            raise ValueError(f"{path}:{i + 1}: {e}") from e
+        kinds[row["kind"]] = kinds.get(row["kind"], 0) + 1
+        if run is None:
+            run = row.get("run")
+        elif row.get("run") != run:
+            raise ValueError(f"{path}:{i + 1}: run id {row.get('run')!r} "
+                             f"differs from the file's {run!r}")
+    if rows[0]["kind"] != "meta":
+        raise ValueError(f"{path}: first row must be 'meta', "
+                         f"got {rows[0]['kind']!r}")
+    if kinds.get("final", 0) > 1:
+        raise ValueError(f"{path}: {kinds['final']} 'final' rows (max 1)")
+    return {"run": run, "kinds": kinds, "rows": len(rows)}
+
+
+def main(argv=None) -> int:
+    paths = list(argv if argv is not None else sys.argv[1:])
+    if not paths:
+        print("usage: python -m repro.telemetry.validate <trace.jsonl> ...",
+              file=sys.stderr)
+        return 2
+    for path in paths:
+        try:
+            info = validate_file(path)
+        except (OSError, ValueError) as e:
+            print(f"INVALID: {e}", file=sys.stderr)
+            return 1
+        kinds = ", ".join(f"{k}={v}" for k, v in sorted(info["kinds"].items()))
+        print(f"ok: {path} run={info['run']} rows={info['rows']} ({kinds})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

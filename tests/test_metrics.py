@@ -1,0 +1,91 @@
+"""core/metrics hardening + the edge_posterior helper (ISSUE 7 satellite)."""
+import numpy as np
+import pytest
+
+from repro.core import edge_posterior, roc_point, structural_hamming
+
+
+def test_roc_point_basic():
+    truth = np.zeros((3, 3), int)
+    truth[0, 1] = truth[1, 2] = 1
+    learned = np.zeros((3, 3), int)
+    learned[0, 1] = 1               # one true edge
+    learned[2, 0] = 1               # one spurious edge
+    fp, tp = roc_point(learned, truth)
+    assert tp == 0.5                # 1 of 2 true edges
+    assert fp == 0.25               # 1 of 4 true non-edges
+
+
+def test_roc_point_empty_inputs():
+    fp, tp = roc_point(np.zeros((0, 0)), np.zeros((0, 0)))
+    assert (fp, tp) == (0.0, 0.0)
+    fp, tp = roc_point(np.zeros((4, 4)), np.zeros((4, 4)))   # edgeless truth
+    assert (fp, tp) == (0.0, 0.0)
+
+
+def test_roc_point_ignores_self_loops():
+    truth = np.eye(4, dtype=int)          # only self-loops: no real edges
+    learned = np.eye(4, dtype=int)
+    assert roc_point(learned, truth) == (0.0, 0.0)
+    # a self-loop on the learned side is not a false positive
+    truth = np.zeros((3, 3), int)
+    truth[0, 1] = 1
+    learned = truth.copy()
+    learned[2, 2] = 1
+    fp, tp = roc_point(learned, truth)
+    assert (fp, tp) == (0.0, 1.0)
+
+
+def test_roc_point_rejects_bad_shapes():
+    with pytest.raises(ValueError, match="square"):
+        roc_point(np.zeros((2, 3)), np.zeros((3, 3)))
+    with pytest.raises(ValueError, match="square"):
+        roc_point(np.zeros(3), np.zeros((3, 3)))
+    with pytest.raises(ValueError, match="differ"):
+        roc_point(np.zeros((2, 2)), np.zeros((3, 3)))
+
+
+def test_structural_hamming_hardened():
+    assert structural_hamming(np.zeros((0, 0)), np.zeros((0, 0))) == 0
+    a = np.zeros((3, 3), int)
+    b = a.copy()
+    b[1, 1] = 1                           # self-loop only: not a difference
+    assert structural_hamming(a, b) == 0
+    b[0, 2] = 1
+    assert structural_hamming(a, b) == 1
+    with pytest.raises(ValueError, match="differ"):
+        structural_hamming(np.zeros((2, 2)), np.zeros((3, 3)))
+
+
+def test_edge_posterior_hand_computed_3_nodes():
+    # 4 thinned samples of a 3-node walk: edge 0->1 present in all four,
+    # 1->2 in two, 2->0 in one; the diagonal picked up a stray count
+    counts = np.array([[1, 4, 0],
+                       [0, 0, 2],
+                       [1, 0, 0]])
+    p = edge_posterior(counts, 4)
+    expect = np.array([[0.0, 1.0, 0.0],
+                       [0.0, 0.0, 0.5],
+                       [0.25, 0.0, 0.0]])
+    np.testing.assert_allclose(p, expect)
+
+
+def test_edge_posterior_pools_chains():
+    counts = np.stack([np.full((3, 3), 2), np.full((3, 3), 4)])  # (C, n, n)
+    p = edge_posterior(counts, 4)         # (2+4) / (2 chains * 4 samples)
+    off = ~np.eye(3, dtype=bool)
+    np.testing.assert_allclose(p[off], 0.75)
+    np.testing.assert_allclose(np.diag(p), 0.0)
+
+
+def test_edge_posterior_degenerate_and_invalid():
+    np.testing.assert_array_equal(edge_posterior(np.zeros((3, 3)), 0),
+                                  np.zeros((3, 3)))
+    with pytest.raises(ValueError, match="square"):
+        edge_posterior(np.zeros((2, 3)), 1)
+    with pytest.raises(ValueError, match="shape"):
+        edge_posterior(np.zeros(3), 1)
+    with pytest.raises(ValueError, match="outside"):
+        edge_posterior(np.full((2, 2), 9), 4)
+    with pytest.raises(ValueError, match="outside"):
+        edge_posterior(np.full((2, 2), -1), 4)
