@@ -6,7 +6,9 @@ export PYTHONPATH := src:$(PYTHONPATH)
         bench-mcmc-sharded bench-mcmc-sharded-smoke \
         bench-preprocess bench-preprocess-smoke \
         bench-preprocess-stream bench-preprocess-stream-smoke \
-        bench-telemetry bench-telemetry-smoke telemetry-smoke
+        bench-telemetry bench-telemetry-smoke telemetry-smoke \
+        bench-faults bench-faults-smoke \
+        bench-supervisor bench-supervisor-smoke chaos-smoke
 
 test:
 	$(PY) -m pytest -q
@@ -54,6 +56,28 @@ bench-telemetry:
 
 bench-telemetry-smoke:
 	$(PY) benchmarks/telemetry_bench.py --smoke
+
+# bit-flip fault-injection study (paper's robustness angle): recovered-score
+# gap and structural F1 vs flip rate; rows merge into BENCH_faults.json
+bench-faults:
+	$(PY) benchmarks/fault_injection.py
+
+bench-faults-smoke:
+	$(PY) benchmarks/fault_injection.py --smoke
+
+# run-supervisor overhead vs the bare segment loop (gate <= 5% iters/sec at
+# n = 64); rows merge into BENCH_mcmc.json with mode="supervised"
+bench-supervisor:
+	$(PY) benchmarks/supervisor_bench.py
+
+bench-supervisor-smoke:
+	$(PY) benchmarks/supervisor_bench.py --smoke
+
+# chaos harness: injected mid-run crash + corrupted checkpoint leaf on the
+# single-device AND sharded engines must auto-resume to a bitwise-identical
+# result; poisoned/stalled chains must heal; all traces re-validate
+chaos-smoke:
+	$(PY) -m repro.launch.chaos
 
 # end-to-end telemetry wiring check: a short --telemetry --stop-on-converge
 # run, then schema re-validation of the emitted JSONL trace

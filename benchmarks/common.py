@@ -30,7 +30,7 @@ ROOT_DIR = os.path.join(os.path.dirname(__file__), "..")
 CONFIG_KEYS = ("n", "q", "s", "m", "S", "iters", "chains", "window",
                "devices", "n_devices", "tp", "dp", "chunk", "block",
                "mode", "variant", "scorer", "delta", "prune_delta",
-               "max_keep", "backend")
+               "max_keep", "backend", "flip_p")
 
 
 _HOST_META: dict | None = None

@@ -1,0 +1,134 @@
+"""Run-supervisor overhead: the segmented bitmask engine driven by the bare
+host loop vs runtime/supervisor.RunSupervisor (ISSUE 8 gate: supervision
+costs <= 5% iters/sec at n = 64).
+
+Both drivers call the SAME jitted segment runner with the same keys and the
+same segment boundaries — the supervisor only adds host work per boundary
+(health guards over (C,) arrays, fault-plan lookups) — and supervision with
+no faults must be a pure OBSERVER: the final chain states are asserted
+bitwise-equal before anything is timed.
+
+  PYTHONPATH=src python benchmarks/supervisor_bench.py [--smoke] [--iters N]
+
+Rows land in BENCH_mcmc.json (mode="supervised") beside the engine and
+telemetry rows, mirrored to the repo root.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from .common import emit, timeit
+except ImportError:                      # run as a plain script
+    import os
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from common import emit, timeit
+
+from repro.core.mcmc import (BitmaskDelta, init_chain,
+                             make_traced_segment_runner, mcmc_step)
+from repro.core.order_scoring import (build_membership_planes,
+                                      build_violation_planes, delta_window,
+                                      score_order_blocked,
+                                      score_order_delta_bitmask)
+from repro.runtime.supervisor import RunSupervisor
+
+from mcmc_bench import make_problem
+
+WINDOW = 8
+CHAINS = 4
+SEGMENTS = 8                    # boundaries per timed run
+GATE_N = 64
+GATE_OVERHEAD = 0.05            # supervision may cost at most 5% iters/sec
+
+
+def bench_size(n: int, s: int, iters: int, block: int = 4096) -> dict:
+    table, pst, S = make_problem(n, s, block)
+    block = min(block, table.shape[1])
+    w = delta_window(n, WINDOW)
+    assert w, f"n={n} too small for window {WINDOW}"
+    score_fn = functools.partial(score_order_blocked, table, pst, block=block)
+    cm = build_membership_planes(pst, n)
+    planes_fn = functools.partial(build_violation_planes, pst)
+
+    def bitmask_fn(pos, lo, prev_ls, prev_idx, pos_old, planes):
+        return score_order_delta_bitmask(table, cm, pos, prev_ls, prev_idx,
+                                         lo, pos_old, planes, window=w,
+                                         block=block)
+    step = lambda st: mcmc_step(st, score_fn, BitmaskDelta(bitmask_fn), w)
+    run_segment = make_traced_segment_runner(step)
+    seg = max(iters // SEGMENTS, 1)
+
+    def states0():
+        keys = jax.random.split(jax.random.key(0), CHAINS)
+        return jax.vmap(
+            lambda k: init_chain(k, n, score_fn, planes_fn=planes_fn))(keys)
+
+    def bare(states):
+        done = 0
+        while done < iters:
+            length = min(seg, iters - done)
+            states, _ = run_segment(states, None, jnp.int32(done),
+                                    length=length)
+            done += length
+        return states
+
+    def supervised(states):
+        sup = RunSupervisor(iters=iters, seg=seg, chains=CHAINS, heal=True,
+                            planes_fn=jax.vmap(planes_fn))
+        return sup.run(run_segment, states, None).states
+
+    # supervision with no faults must observe, never steer: same keys, same
+    # boundaries, final chain states bitwise-equal (never time a bug)
+    a, b = bare(states0()), supervised(states0())
+    np.testing.assert_array_equal(np.asarray(a.pos), np.asarray(b.pos))
+    np.testing.assert_array_equal(np.asarray(a.score), np.asarray(b.score))
+    np.testing.assert_array_equal(np.asarray(a.accepts),
+                                  np.asarray(b.accepts))
+
+    t_bare = timeit(lambda: bare(states0()).score, reps=5)
+    t_sup = timeit(lambda: supervised(states0()).score, reps=5)
+    return {
+        "n": n, "S": S, "window": w, "iters": iters, "chains": CHAINS,
+        "mode": "supervised", "segments": SEGMENTS,
+        "bare_ms_per_it": t_bare / iters * 1e3,
+        "supervised_ms_per_it": t_sup / iters * 1e3,
+        "overhead": t_sup / t_bare - 1.0,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes/iters — CI wiring check, seconds")
+    ap.add_argument("--iters", type=int, default=0,
+                    help="override iterations per timed run")
+    ap.add_argument("--s", type=int, default=3, help="max parent-set size")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        sizes, iters = [16], args.iters or 64
+    else:
+        sizes, iters = [16, 64], args.iters or 400
+
+    rows = [bench_size(n, args.s, iters) for n in sizes]
+    emit("BENCH_mcmc", rows)
+    if not args.smoke:
+        last = rows[-1]
+        print(f"\nn={last['n']}: run supervision costs "
+              f"{last['overhead'] * 100:.1f}% iters/sec "
+              f"(gate <= {GATE_OVERHEAD * 100:g}% at n={GATE_N})")
+        if last["n"] == GATE_N and last["overhead"] > GATE_OVERHEAD:
+            raise SystemExit(
+                f"FAIL: {last['overhead'] * 100:.1f}% > "
+                f"{GATE_OVERHEAD * 100:g}% overhead gate")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,8 @@
-from .checkpointer import (AsyncCheckpointer, latest_step, restore_checkpoint,
+from .checkpointer import (AsyncCheckpointer, CheckpointCorruptError,
+                           io_retry, latest_step, quarantine_step,
+                           restore_checkpoint, restore_latest_verified,
                            save_checkpoint)
 
-__all__ = ["AsyncCheckpointer", "latest_step", "restore_checkpoint",
-           "save_checkpoint"]
+__all__ = ["AsyncCheckpointer", "CheckpointCorruptError", "io_retry",
+           "latest_step", "quarantine_step", "restore_checkpoint",
+           "restore_latest_verified", "save_checkpoint"]

@@ -1,28 +1,73 @@
 """Fault-tolerant checkpointing: device-agnostic (host numpy), atomic
 (write-to-temp + rename), asynchronous (background writer thread), elastic
 (restore re-shards onto whatever mesh is active — checkpoints carry no device
-topology). Auto-resume picks the latest complete step.
+topology), and VERIFIED (per-leaf content digests in the manifest).
 
 Layout: <dir>/step_<n>/ with one .npy per flattened leaf + manifest.json
-(treedef + shapes + dtypes + user metadata). A checkpoint directory is only
-renamed into place after every array and the manifest are fully written, so a
-crash mid-write can never produce a readable-but-corrupt checkpoint.
+(treedef + shapes + dtypes + per-leaf sha256 digests + user metadata). A
+checkpoint directory is only renamed into place after every array and the
+manifest are fully written, so a crash mid-write can never produce a
+readable-but-corrupt checkpoint. Corruption AFTER publish (bit rot, a chaos
+fault, a torn copy) is the digests' job: restore re-hashes every leaf file
+and raises :class:`CheckpointCorruptError` on any mismatch or unreadable
+array; :func:`restore_latest_verified` turns that into recovery — the bad
+step directory is QUARANTINED (renamed ``corrupt_step_<n>.<k>``, out of
+``latest_step``'s sight but kept for forensics) and the next-newest step is
+tried until one verifies. Transient I/O errors on the checkpoint paths are
+retried with capped exponential backoff (:func:`io_retry`) before they are
+allowed to surface.
 """
 from __future__ import annotations
 
+import hashlib
+import io
 import json
+import logging
 import os
 import shutil
 import threading
+import time
 from typing import Any
 
 import jax
 import numpy as np
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
-           "AsyncCheckpointer"]
+           "restore_latest_verified", "quarantine_step",
+           "CheckpointCorruptError", "io_retry", "AsyncCheckpointer"]
 
 _MANIFEST = "manifest.json"
+
+logger = logging.getLogger(__name__)
+
+# capped exponential backoff for transient I/O errors (NFS hiccups, the
+# chaos harness's injected EIO): 4 attempts, 50 ms doubling, 1 s cap
+IO_RETRIES = 4
+IO_BACKOFF_S = 0.05
+IO_BACKOFF_CAP_S = 1.0
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A published checkpoint (or cache entry) failed verification: digest
+    mismatch, unreadable/truncated array, or unparseable manifest."""
+
+
+def io_retry(fn, *args, what: str = "", retries: int = IO_RETRIES,
+             backoff_s: float = IO_BACKOFF_S, **kwargs):
+    """Run ``fn`` retrying transient OSErrors with capped exponential
+    backoff. Non-OSError exceptions (corruption, bugs) propagate
+    immediately — retrying cannot fix a bad digest."""
+    for attempt in range(retries):
+        try:
+            return fn(*args, **kwargs)
+        except OSError as exc:
+            if attempt == retries - 1:
+                raise
+            delay = min(backoff_s * (2 ** attempt), IO_BACKOFF_CAP_S)
+            logger.warning("checkpoint I/O error%s (%s) — retry %d/%d in "
+                           "%.2fs", f" [{what}]" if what else "", exc,
+                           attempt + 1, retries - 1, delay)
+            time.sleep(delay)
 
 
 def _flatten_with_paths(tree):
@@ -46,28 +91,43 @@ def _path_str(k) -> str:
 
 def save_checkpoint(directory: str, step: int, tree: Any,
                     metadata: dict | None = None) -> str:
-    """Blocking save. Returns the final checkpoint path."""
-    os.makedirs(directory, exist_ok=True)
+    """Blocking save. Returns the final checkpoint path.
+
+    Every leaf is serialised to .npy bytes in memory first so its sha256
+    digest (recorded in the manifest, verified on restore) hashes EXACTLY
+    the bytes on disk; the file write itself is wrapped in io_retry."""
+    io_retry(os.makedirs, directory, exist_ok=True, what="mkdir")
     final = os.path.join(directory, f"step_{step:010d}")
     tmp = final + ".tmp"
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp)
     names, leaves, _ = _flatten_with_paths(tree)
-    dtypes = []
+    dtypes, digests = [], {}
     for name, leaf in zip(names, leaves):
         arr = np.asarray(jax.device_get(leaf))
         dtypes.append(str(leaf.dtype))
-        np.save(os.path.join(tmp, name + ".npy"),
-                arr.astype(np.float32) if arr.dtype == np.dtype("bfloat16")
-                else arr)
+        if arr.dtype == np.dtype("bfloat16"):
+            arr = arr.astype(np.float32)
+        buf = io.BytesIO()
+        np.save(buf, arr)
+        data = buf.getvalue()
+        digests[name] = hashlib.sha256(data).hexdigest()
+
+        def write(path=os.path.join(tmp, name + ".npy"), data=data):
+            with open(path, "wb") as f:
+                f.write(data)
+        io_retry(write, what=name)
     manifest = {"step": step, "names": names, "dtypes": dtypes,
-                "metadata": metadata or {}}
-    with open(os.path.join(tmp, _MANIFEST), "w") as f:
-        json.dump(manifest, f)
+                "digests": digests, "metadata": metadata or {}}
+
+    def write_manifest():
+        with open(os.path.join(tmp, _MANIFEST), "w") as f:
+            json.dump(manifest, f)
+    io_retry(write_manifest, what=_MANIFEST)
     if os.path.exists(final):
         shutil.rmtree(final)
-    os.rename(tmp, final)           # atomic publish
+    io_retry(os.rename, tmp, final, what="publish")   # atomic publish
     return final
 
 
@@ -77,9 +137,50 @@ def latest_step(directory: str) -> int | None:
     steps = []
     for name in os.listdir(directory):
         if name.startswith("step_") and not name.endswith(".tmp"):
+            try:
+                step = int(name[5:])
+            except ValueError:
+                continue          # quarantined / foreign directory name
             if os.path.exists(os.path.join(directory, name, _MANIFEST)):
-                steps.append(int(name[5:]))
+                steps.append(step)
     return max(steps) if steps else None
+
+
+def _read_manifest(path: str) -> dict:
+    def read():
+        with open(os.path.join(path, _MANIFEST)) as f:
+            return f.read()
+    try:
+        return json.loads(io_retry(read, what=_MANIFEST))
+    except (json.JSONDecodeError, UnicodeDecodeError) as exc:
+        raise CheckpointCorruptError(
+            f"unparseable manifest at {path}: {exc}") from exc
+
+
+def _load_leaf(path: str, name: str, digest: str | None) -> np.ndarray:
+    """Read one leaf file (with I/O retry), verify its digest when the
+    manifest carries one (pre-digest snapshots restore unverified), and
+    parse the array — any failure is corruption, not a transient error."""
+    fname = os.path.join(path, name + ".npy")
+
+    def read():
+        with open(fname, "rb") as f:
+            return f.read()
+    try:
+        data = io_retry(read, what=name)
+    except FileNotFoundError as exc:
+        raise CheckpointCorruptError(f"missing leaf file {fname}") from exc
+    if digest is not None:
+        got = hashlib.sha256(data).hexdigest()
+        if got != digest:
+            raise CheckpointCorruptError(
+                f"digest mismatch for {fname}: stored {digest[:12]}…, "
+                f"recomputed {got[:12]}…")
+    try:
+        return np.load(io.BytesIO(data), allow_pickle=False)
+    except Exception as exc:                      # truncated / garbled .npy
+        raise CheckpointCorruptError(
+            f"unreadable leaf file {fname}: {exc}") from exc
 
 
 def restore_checkpoint(directory: str, tree_like: Any, step: int | None = None,
@@ -89,6 +190,11 @@ def restore_checkpoint(directory: str, tree_like: Any, step: int | None = None,
     `allow_missing` backfills them). If `shardings` is given (pytree of
     NamedSharding), leaves are placed sharded — this is the elastic path: any
     mesh works, the checkpoint is topology-free. Returns (tree, metadata).
+
+    Every leaf with a manifest digest is VERIFIED against it; a mismatch or
+    unreadable file raises :class:`CheckpointCorruptError` (callers that can
+    fall back — the supervisor, the preprocess cache — catch it; see
+    :func:`restore_latest_verified`).
 
     allow_missing=True is the schema-evolution path: leaves of `tree_like`
     with no counterpart in the manifest KEEP the caller's value (callers pass
@@ -103,20 +209,20 @@ def restore_checkpoint(directory: str, tree_like: Any, step: int | None = None,
         if step is None:
             raise FileNotFoundError(f"no checkpoint in {directory}")
     path = os.path.join(directory, f"step_{step:010d}")
-    with open(os.path.join(path, _MANIFEST)) as f:
-        manifest = json.load(f)
+    manifest = _read_manifest(path)
     names, cur_leaves, treedef = _flatten_with_paths(tree_like)
     missing = [n for n in names if n not in manifest["names"]]
     if (set(manifest["names"]) - set(names)) or (missing and not allow_missing):
         raise ValueError("checkpoint structure mismatch: "
                          f"{set(manifest['names']) ^ set(names)}")
     dtypes = dict(zip(manifest["names"], manifest["dtypes"]))
+    digests = manifest.get("digests", {})     # absent in pre-digest snapshots
     sh_leaves = (jax.tree.leaves(shardings) if shardings is not None
                  else [None] * len(names))
     leaves = []
     for name, cur, sh in zip(names, cur_leaves, sh_leaves):
         if name in dtypes:
-            arr = np.load(os.path.join(path, name + ".npy"))
+            arr = _load_leaf(path, name, digests.get(name))
             val = jax.numpy.asarray(arr, dtype=dtypes[name])
         else:
             val = cur                      # backfilled from the caller's init
@@ -129,26 +235,74 @@ def restore_checkpoint(directory: str, tree_like: Any, step: int | None = None,
     return treedef.unflatten(leaves), metadata
 
 
+def quarantine_step(directory: str, step: int) -> str:
+    """Move a corrupt step directory out of ``latest_step``'s sight (renamed
+    ``corrupt_step_<n>[.k]``, kept for forensics). Returns the new path."""
+    src = os.path.join(directory, f"step_{step:010d}")
+    dst = os.path.join(directory, f"corrupt_step_{step:010d}")
+    k = 0
+    while os.path.exists(dst):
+        k += 1
+        dst = os.path.join(directory, f"corrupt_step_{step:010d}.{k}")
+    io_retry(os.rename, src, dst, what="quarantine")
+    return dst
+
+
+def restore_latest_verified(directory: str, tree_like: Any,
+                            shardings: Any = None,
+                            allow_missing: bool = False
+                            ) -> tuple[Any, dict, int]:
+    """Restore the newest step that passes digest verification.
+
+    Corrupt steps (digest mismatch, truncated arrays, unparseable manifest)
+    are quarantined and the next-newest step is tried — the recovery half of
+    the verified-checkpoint contract. Returns (tree, metadata, step); raises
+    FileNotFoundError once no verifiable step remains. Structure mismatches
+    (ValueError) propagate: they mean the CALLER's template is wrong, not
+    that the snapshot rotted."""
+    while True:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no verifiable checkpoint in {directory}")
+        try:
+            tree, metadata = restore_checkpoint(
+                directory, tree_like, step=step, shardings=shardings,
+                allow_missing=allow_missing)
+            return tree, metadata, step
+        except CheckpointCorruptError as exc:
+            quarantined = quarantine_step(directory, step)
+            logger.warning("checkpoint step %d failed verification (%s) — "
+                           "quarantined to %s, falling back", step, exc,
+                           quarantined)
+
+
 class AsyncCheckpointer:
     """Background writer: save() returns immediately; wait() joins. Keeps at
-    most `keep` checkpoints (older ones pruned after a successful write)."""
+    most `keep` checkpoints (older ones pruned after a successful write).
+
+    A writer-thread exception is never lost: it is stashed under a lock and
+    re-raised on the NEXT save()/wait() call — callers that fire-and-forget
+    saves still hear about a failed write at the following snapshot boundary
+    instead of discovering a hole in the trajectory at restore time."""
 
     def __init__(self, directory: str, keep: int = 3):
         self.directory = directory
         self.keep = keep
         self._thread: threading.Thread | None = None
+        self._lock = threading.Lock()
         self.last_error: Exception | None = None
 
     def save(self, step: int, tree: Any, metadata: dict | None = None) -> None:
-        self.wait()
+        self.wait()                    # re-raises a previous writer failure
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
 
         def work():
             try:
                 save_checkpoint(self.directory, step, host_tree, metadata)
                 self._prune()
-            except Exception as e:          # surfaced on next wait()
-                self.last_error = e
+            except Exception as e:          # surfaced on next save()/wait()
+                with self._lock:
+                    self.last_error = e
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()
@@ -157,14 +311,23 @@ class AsyncCheckpointer:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
-        if self.last_error is not None:
+        with self._lock:
             err, self.last_error = self.last_error, None
+        if err is not None:
             raise err
 
     def _prune(self) -> None:
         steps = sorted(s for s in (
-            int(n[5:]) for n in os.listdir(self.directory)
-            if n.startswith("step_") and not n.endswith(".tmp")))
+            _parse_step(n) for n in os.listdir(self.directory)
+            if n.startswith("step_") and not n.endswith(".tmp"))
+            if s is not None)
         for s in steps[:-self.keep]:
             shutil.rmtree(os.path.join(self.directory, f"step_{s:010d}"),
                           ignore_errors=True)
+
+
+def _parse_step(name: str) -> int | None:
+    try:
+        return int(name[5:])
+    except ValueError:
+        return None

@@ -397,9 +397,18 @@ def exchange_step(states: ChainState) -> ChainState:
     so the exchange is explicitly a NO-OP instead of a self-copy — no leaf
     traffic (mask_planes can be large and mesh-sharded), and the invariant
     that win_idx / dual-averaging stats / keys / accept counts stay strictly
-    per-slot holds trivially on every round."""
-    b = jnp.argmax(states.best_score)
-    w = jnp.argmin(states.best_score)
+    per-slot holds trivially on every round.
+
+    The ranking is NaN/inf-SAFE for graceful degradation under the run
+    supervisor's fault model: a poisoned chain (non-finite best_score) ranks
+    as -inf, so it is always the recipient and never the donor — one sick
+    chain cannot spread through the exchange while it waits to be healed at
+    the next segment boundary. On all-finite inputs the masked rank is
+    bitwise the raw best_score, so healthy runs are unchanged."""
+    rank = jnp.where(jnp.isfinite(states.best_score), states.best_score,
+                     -jnp.inf)
+    b = jnp.argmax(rank)
+    w = jnp.argmin(rank)
 
     def copy(st: ChainState) -> ChainState:
         def mv(leaf):

@@ -42,6 +42,20 @@ edge marginals, appended as schema-versioned JSONL under --trace-dir.
 --stop-on-converge turns the R̂ pair into an early-stopping rule (both below
 --rhat-threshold for --patience consecutive checks), so long runs stop on
 convergence rather than on the iteration cap.
+
+--supervise (ISSUE 8) hands the segmented host loop — single-device,
+adaptive AND sharded — to the fault-tolerant run supervisor
+(runtime/supervisor.py): restores go through digest-verified checkpoints
+(corrupt steps are quarantined, the run falls back to the newest step that
+verifies), and between segments the supervisor folds the collector's
+stuck/diverged flags plus its own NaN/inf + progress guards into
+telemetry-driven chain healing (straggler cloning from the best finite
+chain, planes/caches/trace leaves re-seeded together, one ``heal`` JSONL
+row per event). --fault-plan injects deterministic chaos (crashes around
+checkpoint writes, checkpoint/cache corruption, chain poisoning/stalls —
+grammar in runtime/faults.py) so the recovery machinery is testable:
+``make chaos-smoke`` asserts a crash-injected run resumes and finishes
+bitwise-identical to an uninterrupted one.
 """
 from __future__ import annotations
 
@@ -54,7 +68,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from ..core import (adjacency_from_ranks, build_score_table, mcmc_run,
                     random_cpts, roc_point)
 from ..core.combinatorics import n_parent_sets
@@ -74,6 +87,9 @@ from ..data.bn_sampler import ancestral_sample, inject_noise
 from ..data.networks import (alarm_adjacency, stn_adjacency,
                              synthetic_adjacency)
 from ..preprocess import SparseScoreTable, build_score_table_fused
+from ..runtime.faults import parse_fault_plan
+from ..runtime.supervisor import (N_STATE_LEAVES, RunSupervisor, pack_tree,
+                                  unpack_tree)
 
 __all__ = ["LearnConfig", "learn_structure", "make_score_fn",
            "make_delta_fn", "adaptive_window_set", "reconcile_mask_planes",
@@ -139,6 +155,15 @@ class LearnConfig:
     patience: int = 3             # ... for this many consecutive checks
     trace_dir: str = "experiments/runs"  # JSONL trace directory
     run_name: str = ""            # trace file stem ("" = timestamped)
+    # --- fault-tolerant run supervisor (runtime/supervisor; ISSUE 8) -----
+    supervise: bool = False       # telemetry-driven chain healing between
+                                  # segments (NaN/inf + progress guards,
+                                  # collector stuck/diverged flags)
+    fault_plan: str = ""          # deterministic chaos spec (grammar in
+                                  # runtime/faults.py), e.g.
+                                  # "corrupt@1:bitflip;crash@1:after"
+    heal_patience: int = 1        # consecutive unhealthy checks before a
+                                  # chain is healed (1 = next boundary)
 
 
 def _padded(st, block: int):
@@ -303,31 +328,44 @@ def _auto_check_every(cfg: LearnConfig) -> int:
     return cfg.check_every or max(64, 16 * cfg.trace_every)
 
 
-_N_STATE_LEAVES = len(ChainState._fields)
+# checkpoint tree layout now lives with the run supervisor
+# (runtime/supervisor.py); aliases kept for callers of the old names
+_N_STATE_LEAVES = N_STATE_LEAVES
+_pack_tree = pack_tree
+_unpack_tree = unpack_tree
 
 
-def _pack_tree(pack, states, trace):
-    """Checkpoint layout with telemetry: the ChainState leaves first (EXACTLY
-    the pre-telemetry tuple when trace is None), TraceState leaves appended
-    after them — so pre-telemetry snapshots restore through the
-    checkpointer's ``allow_missing`` backfill (the trace leaves come back
-    from the fresh template), the same schema-evolution path the pre-bitmask
-    9-leaf snapshots use."""
-    tree = tuple(pack(states))
-    if trace is not None:
-        tree = tree + tuple(np.asarray(leaf) for leaf in trace)
-    return tree
+def _make_pack_unpack(n_chains: int):
+    """Checkpoint (de)serialisation closures shared by every segmented
+    driver: typed PRNG keys are not numpy-serializable, so the key leaf is
+    snapshot as key data; the consistency planes are a pos-derived cache —
+    snapshot a zero-size stand-in and rebuild after restore (smaller
+    checkpoints, and pre-tentpole snapshots restore through the same
+    path)."""
+    dummy_planes = jnp.zeros((n_chains, 0), jnp.uint32)
+    pack = lambda s: jax.tree.map(
+        np.asarray, s._replace(key=jax.random.key_data(s.key),
+                               mask_planes=dummy_planes))
+    unpack = lambda t: ChainState(*t)._replace(
+        key=jax.random.wrap_key_data(jnp.asarray(t[0])))
+    return pack, unpack
 
 
-def _unpack_tree(unpack, restored, trace):
-    """Inverse of :func:`_pack_tree`: split the restored tuple back into
-    (ChainState, TraceState | None)."""
-    restored = tuple(jnp.asarray(leaf) for leaf in restored)
-    states = unpack(restored[:_N_STATE_LEAVES])
-    if trace is not None:
-        from ..telemetry import TraceState
-        trace = TraceState(*restored[_N_STATE_LEAVES:])
-    return states, trace
+def _make_supervisor(cfg: LearnConfig, seg: int, collector,
+                     stacked_planes_fn) -> RunSupervisor:
+    """One RunSupervisor per run, shared config plumbing for the
+    single-device and sharded drivers."""
+    pack, unpack = _make_pack_unpack(cfg.chains)
+    faults = (parse_fault_plan(cfg.fault_plan, seed=cfg.seed)
+              if cfg.fault_plan else None)
+    return RunSupervisor(
+        iters=cfg.iters, seg=seg, chains=cfg.chains,
+        checkpoint_dir=cfg.checkpoint_dir,
+        checkpoint_every=cfg.checkpoint_every,
+        collector=collector, stop_on_converge=cfg.stop_on_converge,
+        faults=faults, heal=cfg.supervise, heal_patience=cfg.heal_patience,
+        seed=cfg.seed, planes_fn=stacked_planes_fn, cache_dir=cfg.cache_dir,
+        pack=pack, unpack=unpack)
 
 
 def _run_sharded(st, cfg: LearnConfig, key, n: int, collector=None):
@@ -341,7 +379,10 @@ def _run_sharded(st, cfg: LearnConfig, key, n: int, collector=None):
     only per-chain quantities that the engine's own pmax/pmin reduction
     already replicated, so telemetry adds ZERO collective traffic over the
     model axis — the collector drains between segments and may stop the run
-    early. Returns (states, delta_window, mask_on, iters_run, stopped)."""
+    early. The host loop (verified restore, chaos injection, chain healing)
+    is the shared RunSupervisor — the sharded engine gets the same fault
+    tolerance as the single-device ones.
+    Returns (states, delta_window, mask_on, iters_run, stopped, heals)."""
     from ..core.sharded_scoring import (_shard_block, make_sharded_planes_fn,
                                         pad_table, score_order_sharded,
                                         sharded_chain_step)
@@ -399,61 +440,34 @@ def _run_sharded(st, cfg: LearnConfig, key, n: int, collector=None):
 
     checkpointed = bool(cfg.checkpoint_every and cfg.checkpoint_dir)
     seg = cfg.checkpoint_every if checkpointed else \
-        (_auto_check_every(cfg) if telem else cfg.iters)
+        (_auto_check_every(cfg) if telem or cfg.supervise or cfg.fault_plan
+         else cfg.iters)
     with mesh_context(mesh):
         keys = jax.random.split(key, cfg.chains)
         states = jax.vmap(lambda k: init_chain(k, n, score_fn))(keys)
         if mask_on:
             # per-shard plane build: each device packs its own S-shard words
             states = states._replace(mask_planes=splanes_fn(states.pos))
-        pack = unpack = None
-        if checkpointed:
-            dummy = jnp.zeros((cfg.chains, 0), jnp.uint32)
-            pack = lambda s: jax.tree.map(
-                np.asarray, s._replace(key=jax.random.key_data(s.key),
-                                       mask_planes=dummy))
-            unpack = lambda t: ChainState(*t)._replace(
-                key=jax.random.wrap_key_data(jnp.asarray(t[0])))
-            done = latest_step(cfg.checkpoint_dir)
-            if done is not None:
-                restored, _ = restore_checkpoint(
-                    cfg.checkpoint_dir, _pack_tree(pack, states, trace),
-                    step=done, allow_missing=True)
-                states, trace = _unpack_tree(unpack, restored, trace)
-                states = reconcile_mask_planes(states, splanes_fn)
-            else:
-                done = 0
-        else:
-            done = 0
-        stopped = False
-        while done < cfg.iters and not stopped:
-            length = min(seg, cfg.iters - done)
-            states, trace = run_segment(states, trace, jnp.int32(done),
-                                        length=length)
-            done += length
-            if checkpointed:
-                save_checkpoint(cfg.checkpoint_dir, done,
-                                _pack_tree(pack, states, trace))
-            if telem:
-                from ..telemetry import drain
-                rec = collector.check(drain(trace), done)
-                if cfg.stop_on_converge and rec["converged"]:
-                    stopped = True
+        sup = _make_supervisor(cfg, seg, collector,
+                               splanes_fn if mask_on else None)
+        res = sup.run(run_segment, states, trace)
+        states = res.states
         jax.block_until_ready(states.best_score)
-    return states, w, mask_on, done, stopped
+    return states, w, mask_on, res.iters_run, res.stopped, res.heals
 
 
 def _run_segmented(st, cfg: LearnConfig, key, n: int, score_fn, window,
                    delta_fn, planes_fn, adaptive_ws, delta_fns, burn_in,
                    collector):
     """Unified segmented driver for the single-device engines: used whenever
-    the run is checkpointed OR telemetry is on (the two reasons the host
-    must see the walk at sub-run granularity). One jitted segment runner
-    carries (ChainState, TraceState) through the scan; between segments the
-    host snapshots (checkpointing) and/or drains the trace (collector check,
-    which is where --stop-on-converge can cut the run short).
+    the run is checkpointed, telemetry is on, or the run is supervised (the
+    reasons the host must see the walk at sub-run granularity). One jitted
+    segment runner carries (ChainState, TraceState) through the scan; the
+    host loop between segments — verified restore, checkpoint snapshots,
+    collector checks / early stop, chaos injection and chain healing — is
+    the shared RunSupervisor (runtime/supervisor.py).
 
-    Returns (stacked states, iters_run, stopped_early)."""
+    Returns (stacked states, iters_run, stopped_early, heals)."""
     telem = collector is not None
     checkpointed = bool(cfg.checkpoint_every and cfg.checkpoint_dir)
     C = cfg.chains
@@ -481,52 +495,16 @@ def _run_segmented(st, cfg: LearnConfig, key, n: int, score_fn, window,
                                              exchange_every=exch)
     seg = cfg.checkpoint_every if checkpointed else _auto_check_every(cfg)
 
-    done = 0
-    pack = unpack = None
-    if checkpointed:
-        # typed PRNG keys are not numpy-serializable: snapshot the key data;
-        # the consistency planes are a pos-derived cache — snapshot a
-        # zero-size stand-in and rebuild after restore (smaller checkpoints,
-        # and pre-tentpole snapshots restore through the same path)
-        dummy_planes = jnp.zeros((C, 0), jnp.uint32)
-        pack = lambda s: jax.tree.map(
-            np.asarray, s._replace(key=jax.random.key_data(s.key),
-                                   mask_planes=dummy_planes))
-        unpack = lambda t: ChainState(*t)._replace(
-            key=jax.random.wrap_key_data(jnp.asarray(t[0])))
-        found = latest_step(cfg.checkpoint_dir)
-        if found is not None:
-            restored, _ = restore_checkpoint(
-                cfg.checkpoint_dir, _pack_tree(pack, states, trace),
-                step=found, allow_missing=True)
-            states, trace = _unpack_tree(unpack, restored, trace)
-            # derived-cache interop: rebuild or reset the planes leaf no
-            # matter which engine variant wrote the snapshot
-            states = reconcile_mask_planes(
-                states, (jax.vmap(planes_fn) if planes_fn is not None
-                         else None))
-            done = found
-
-    stopped = False
-    while done < cfg.iters and not stopped:
-        length = min(seg, cfg.iters - done)
-        states, trace = run_segment(states, trace, jnp.int32(done),
-                                    length=length)
-        done += length
-        if checkpointed:
-            save_checkpoint(cfg.checkpoint_dir, done,
-                            _pack_tree(pack, states, trace))
-        if telem:
-            from ..telemetry import drain
-            rec = collector.check(drain(trace), done)
-            if cfg.stop_on_converge and rec["converged"]:
-                stopped = True
-    return states, done, stopped
+    sup = _make_supervisor(
+        cfg, seg, collector,
+        (jax.vmap(planes_fn) if planes_fn is not None else None))
+    res = sup.run(run_segment, states, trace)
+    return res.states, res.iters_run, res.stopped, res.heals
 
 
 def _finish(cfg: LearnConfig, st, states, best_score, best_idx, *, window,
             adaptive_ws, mask_on, sharded, t_pre, cache_hit, auto_pruned,
-            t_iter, iters_run, stopped, collector) -> dict:
+            t_iter, iters_run, stopped, collector, heals=()) -> dict:
     """Common run epilogue: adjacency decode, per-chain statistics, the
     result dict, and — with telemetry on — the final trace row. ``states``
     may be a single un-stacked ChainState (chains == 1 fast paths) or the
@@ -562,6 +540,7 @@ def _finish(cfg: LearnConfig, st, states, best_score, best_idx, *, window,
         "iters_run": iters_run,
         "stopped_early": stopped,
         "S": st.S,
+        "heals": list(heals),         # supervisor chain-healing events
         "telemetry": None,
     }
     if collector is not None:
@@ -627,7 +606,7 @@ def learn_structure(data: np.ndarray, cfg: LearnConfig, *,
 
     if cfg.sharded:
         t0 = time.time()
-        states, window, mask_on, iters_run, stopped = _run_sharded(
+        states, window, mask_on, iters_run, stopped, heals = _run_sharded(
             st, cfg, key, n, collector)
         t_iter = time.time() - t0
         best_score, best_idx, _ = exchange_best(states)
@@ -636,7 +615,7 @@ def learn_structure(data: np.ndarray, cfg: LearnConfig, *,
                        t_pre=t_pre, cache_hit=cache_hit,
                        auto_pruned=auto_pruned, t_iter=t_iter,
                        iters_run=iters_run, stopped=stopped,
-                       collector=collector)
+                       collector=collector, heals=heals)
 
     score_fn = make_score_fn(st, cfg)
 
@@ -660,9 +639,11 @@ def learn_structure(data: np.ndarray, cfg: LearnConfig, *,
     mask_on = isinstance(delta_fn, BitmaskDelta) or \
         (cfg.adapt_window and planes_fn is not None)
 
+    supervised = cfg.supervise or bool(cfg.fault_plan)
     iters_run, stopped = cfg.iters, False
+    heals: list = []
     t0 = time.time()
-    if not checkpointed and not telem:
+    if not checkpointed and not telem and not supervised:
         # fast paths: the whole walk is ONE jitted program, no segmentation
         if cfg.adapt_window:
             if cfg.chains == 1:
@@ -692,9 +673,10 @@ def learn_structure(data: np.ndarray, cfg: LearnConfig, *,
                                      planes_fn=planes_fn)
             best_score, best_idx, _ = exchange_best(states)
     else:
-        # segmented path: checkpointing and/or telemetry need the host
-        # between scan segments (snapshots, collector checks, early stop)
-        states, iters_run, stopped = _run_segmented(
+        # segmented path: checkpointing, telemetry and/or supervision need
+        # the host between scan segments (snapshots, collector checks,
+        # early stop, chaos injection, chain healing)
+        states, iters_run, stopped, heals = _run_segmented(
             st, cfg, key, n, score_fn, window, delta_fn,
             planes_fn, adaptive_ws, delta_fns, burn_in, collector)
         best_score, best_idx, _ = exchange_best(states)
@@ -707,7 +689,7 @@ def learn_structure(data: np.ndarray, cfg: LearnConfig, *,
                    adaptive_ws=adaptive_ws, mask_on=mask_on, sharded=False,
                    t_pre=t_pre, cache_hit=cache_hit, auto_pruned=auto_pruned,
                    t_iter=t_iter, iters_run=iters_run, stopped=stopped,
-                   collector=collector)
+                   collector=collector, heals=heals)
 
 
 def _network_data(name: str, m: int, q: int, seed: int, n_synth: int = 64):
@@ -798,6 +780,19 @@ def main(argv=None) -> dict:
                     help="JSONL trace directory for --telemetry")
     ap.add_argument("--run-name", default="",
                     help="trace file stem ('' = timestamped)")
+    ap.add_argument("--supervise", action="store_true",
+                    help="fault-tolerant run supervisor: verified "
+                         "checkpoint restore with quarantine/fallback, and "
+                         "telemetry-driven chain healing between segments "
+                         "(NaN/inf + progress guards, collector "
+                         "stuck/diverged flags → straggler cloning)")
+    ap.add_argument("--fault-plan", default="",
+                    help="deterministic chaos spec fired at segment "
+                         "boundaries (grammar in runtime/faults.py), e.g. "
+                         "'corrupt@1:bitflip;crash@1:after'")
+    ap.add_argument("--heal-patience", type=int, default=1,
+                    help="consecutive unhealthy checks before --supervise "
+                         "heals a chain (1 = the next segment boundary)")
     args = ap.parse_args(argv)
 
     truth, data = _network_data(args.network, args.samples, args.q, args.seed,
@@ -838,7 +833,10 @@ def main(argv=None) -> dict:
                       rhat_threshold=args.rhat_threshold,
                       patience=args.patience,
                       trace_dir=args.trace_dir,
-                      run_name=args.run_name)
+                      run_name=args.run_name,
+                      supervise=args.supervise,
+                      fault_plan=args.fault_plan,
+                      heal_patience=args.heal_patience)
     out = learn_structure(data, cfg)
     fp, tp = roc_point(out["adjacency"], truth)
     out["tp_rate"], out["fp_rate"] = tp, fp
@@ -875,6 +873,10 @@ def main(argv=None) -> dict:
         summary += f" win_hist={out['window_hist']}"
     if out["exchange_count"]:
         summary += f" exchanges={out['exchange_count']}"
+    if out.get("heals"):
+        events = " ".join(f"{h['chain']}<-{h['donor']}@{h['iter']}"
+                          f"({h['reason']})" for h in out["heals"])
+        summary += f" heals=[{events}]"
     tele = out.get("telemetry")
     if tele is not None:
         summary += (f" | R̂(score)={tele['score_rhat']:.3f} "

@@ -26,7 +26,11 @@ Restores are **verified against the request**: every entry stores a manifest
 (q, s, m, n, gamma, ess, kind, ...) and ``load_cached_*`` takes an
 ``expect`` mapping — any mismatch (stale format, hand-mixed cache dirs,
 truncated copies) is treated as a logged miss instead of being served as a
-silently wrong-shape table.
+silently wrong-shape table. The checkpointer additionally digests every
+array at write time (sha256 in the manifest) and re-verifies on restore, so
+a truncated or bit-flipped cached .npy degrades to the same logged
+miss-and-rebuild instead of feeding garbage scores into the walk — which is
+exactly what the supervisor's ``cache@K`` chaos fault exercises.
 """
 from __future__ import annotations
 

@@ -5,9 +5,12 @@ re-places state.
 At 1000+ nodes the failure model is: a pod (or slice) drops out, the job
 controller restarts the program on the surviving slices, `remesh_plan` picks
 the largest usable mesh, and `restore_checkpoint(..., shardings=...)`
-re-shards every array onto it. MCMC chains (BN workload) are re-balanced by
-runtime.straggler; LM training adjusts gradient accumulation to preserve the
-global batch.
+re-shards every array onto it — the BN path routes that restore through
+`checkpoint.restore_latest_verified`, so a snapshot that rotted while the
+job was down is quarantined and the next-newest verified one is re-sharded
+instead. MCMC chains (BN workload) are re-balanced by runtime.straggler
+(driven between segments by runtime.supervisor's health guards); LM
+training adjusts gradient accumulation to preserve the global batch.
 """
 from __future__ import annotations
 

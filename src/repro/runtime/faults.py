@@ -1,0 +1,280 @@
+"""Deterministic chaos: seeded fault injection for the supervised BN run loop.
+
+A :class:`FaultPlan` is a small, fully deterministic schedule of
+infrastructure failures, fired by the run supervisor
+(runtime/supervisor.py) at segment boundaries — the only points where the
+host touches the walk, so every fault lands at a well-defined global
+iteration and a crashed run can be compared BITWISE against an
+uninterrupted one. Faults never use ambient randomness: targets left
+unspecified (which chain, which checkpoint leaf, which byte) are drawn from
+a PRNG seeded by the plan, so the same spec string always breaks the same
+things.
+
+Spec grammar (``parse_fault_plan``), events joined by ``;``::
+
+    crash@K[:before|after]          kill the process at the checkpoint write
+                                    after segment K completes (before = the
+                                    snapshot is lost; after = resume from it)
+    corrupt@K[:leaf=NAME][:bitflip|truncate]
+                                    corrupt the NEWEST checkpoint right after
+                                    the write that follows segment K
+    poison@K[:chain=C][:nan|inf]    poison chain C's cached scores (score,
+                                    cur_ls, best_score) before segment K runs
+    stall@K[:chain=C]               freeze chain C's progress from segment K
+                                    on (the supervisor replays its snapshot
+                                    every boundary until the chain is healed)
+    cache@K[:truncate|delete]       corrupt/delete a preprocess cache entry
+                                    before segment K runs
+
+Segment indices are 0-based ordinals of COMPLETED segments, counted across
+restarts (the supervisor persists the counter in checkpoint metadata), so a
+resumed run never re-fires events from before the crash. Crash events are
+the one exception to in-process bookkeeping: the process is gone, so the
+harness (launch/chaos.py) simply omits the crash from the resume
+invocation's plan — the same arm-once discipline real chaos tooling uses.
+
+:class:`InjectedCrash` derives from RuntimeError, NOT SystemExit: the
+supervised drivers let it propagate (a real non-zero exit) while the chaos
+harness and tests catch it to assert resume behaviour in-process.
+"""
+from __future__ import annotations
+
+import logging
+import os
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = ["InjectedCrash", "FaultEvent", "FaultPlan", "parse_fault_plan",
+           "poison_chain_state", "corrupt_checkpoint_dir",
+           "corrupt_cache_dir"]
+
+logger = logging.getLogger(__name__)
+
+KINDS = ("crash", "corrupt", "poison", "stall", "cache")
+# events applied at the TOP of the loop, before the target segment runs
+PRE_SEGMENT_KINDS = ("poison", "stall", "cache")
+
+
+class InjectedCrash(RuntimeError):
+    """Raised by a crash fault: the supervised process dies here."""
+
+    def __init__(self, message: str, code: int = 17):
+        super().__init__(message)
+        self.code = code
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    kind: str            # one of KINDS
+    segment: int         # 0-based segment ordinal the event is keyed to
+    mode: str = ""       # before/after, bitflip/truncate/delete, nan/inf
+    chain: int = -1      # poison/stall target (-1 = seeded choice)
+    leaf: str = ""       # corrupt target leaf name ("" = seeded choice)
+
+    def describe(self) -> str:
+        bits = [f"{self.kind}@{self.segment}"]
+        if self.mode:
+            bits.append(self.mode)
+        if self.chain >= 0:
+            bits.append(f"chain={self.chain}")
+        if self.leaf:
+            bits.append(f"leaf={self.leaf}")
+        return ":".join(bits)
+
+
+_DEFAULT_MODE = {"crash": "after", "corrupt": "bitflip", "poison": "nan",
+                 "cache": "truncate", "stall": ""}
+_VALID_MODE = {"crash": {"before", "after"},
+               "corrupt": {"bitflip", "truncate"},
+               "poison": {"nan", "inf"},
+               "cache": {"truncate", "delete"},
+               "stall": set()}
+
+
+def parse_fault_plan(spec: str, seed: int = 0) -> "FaultPlan":
+    """Parse a spec string (grammar in the module docstring) into a plan.
+    An empty/whitespace spec yields an empty plan (no faults)."""
+    events = []
+    for raw in spec.replace(",", ";").split(";"):
+        raw = raw.strip()
+        if not raw:
+            continue
+        head, _, rest = raw.partition("@")
+        kind = head.strip()
+        if kind not in KINDS:
+            raise ValueError(f"unknown fault kind {kind!r} in {raw!r} "
+                             f"(expected one of {KINDS})")
+        toks = rest.split(":")
+        try:
+            segment = int(toks[0])
+        except (ValueError, IndexError):
+            raise ValueError(f"fault event {raw!r} needs an integer segment: "
+                             f"kind@SEGMENT[:opt]*") from None
+        mode, chain, leaf = _DEFAULT_MODE[kind], -1, ""
+        for tok in toks[1:]:
+            tok = tok.strip()
+            if not tok:
+                continue
+            if tok.startswith("chain="):
+                chain = int(tok[6:])
+            elif tok.startswith("leaf="):
+                leaf = tok[5:]
+            elif tok in _VALID_MODE[kind]:
+                mode = tok
+            else:
+                raise ValueError(f"bad option {tok!r} for {kind!r} in {raw!r}")
+        events.append(FaultEvent(kind, segment, mode, chain, leaf))
+    events.sort(key=lambda e: (e.segment, KINDS.index(e.kind), e.chain,
+                               e.leaf))
+    return FaultPlan(events=events, seed=seed)
+
+
+@dataclass
+class FaultPlan:
+    """The full (deterministic) fault schedule for one supervised run."""
+    events: list[FaultEvent] = field(default_factory=list)
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+
+    def __bool__(self) -> bool:
+        return bool(self.events)
+
+    def pre_segment(self, seg_idx: int) -> list[FaultEvent]:
+        """Events applied before segment ``seg_idx`` runs."""
+        return [e for e in self.events
+                if e.kind in PRE_SEGMENT_KINDS and e.segment == seg_idx]
+
+    def checkpoint_events(self, seg_idx: int
+                          ) -> tuple[bool, list[FaultEvent], bool]:
+        """(crash_before, corrupt_events, crash_after) for the checkpoint
+        write that follows completed segment ``seg_idx``."""
+        before = after = False
+        corrupts = []
+        for e in self.events:
+            if e.segment != seg_idx:
+                continue
+            if e.kind == "crash":
+                before |= e.mode == "before"
+                after |= e.mode == "after"
+            elif e.kind == "corrupt":
+                corrupts.append(e)
+        return before, corrupts, after
+
+    # ----------------------------------------------------------- appliers
+    def poison(self, states, event: FaultEvent):
+        """NaN/inf-poison one chain's cached scores (score, cur_ls,
+        best_score) on the stacked ChainState. Returns the poisoned stack."""
+        import jax.numpy as jnp
+        C = int(states.score.shape[0])
+        chain = event.chain if event.chain >= 0 else int(self._rng.integers(C))
+        bad = jnp.float32(np.nan if event.mode == "nan" else np.inf)
+        logger.warning("fault: poisoning chain %d with %s", chain, event.mode)
+        return states._replace(
+            score=states.score.at[chain].set(bad),
+            cur_ls=states.cur_ls.at[chain].set(bad),
+            best_score=states.best_score.at[chain].set(bad)), chain
+
+    def pick_chain(self, event: FaultEvent, n_chains: int) -> int:
+        return (event.chain if event.chain >= 0
+                else int(self._rng.integers(n_chains)))
+
+    def corrupt_checkpoint(self, directory: str, event: FaultEvent) -> str:
+        return corrupt_checkpoint_dir(directory, self._rng, leaf=event.leaf,
+                                      mode=event.mode)
+
+    def corrupt_cache(self, cache_dir: str, event: FaultEvent) -> str | None:
+        return corrupt_cache_dir(cache_dir, self._rng, mode=event.mode)
+
+    def crash(self, where: str):
+        raise InjectedCrash(f"fault plan: injected crash {where}")
+
+
+def poison_chain_state(states, chain: int, mode: str = "nan"):
+    """Standalone poison helper (tests): NaN/inf the cached scores of one
+    chain in a stacked ChainState."""
+    import jax.numpy as jnp
+    bad = jnp.float32(np.nan if mode == "nan" else np.inf)
+    return states._replace(
+        score=states.score.at[chain].set(bad),
+        cur_ls=states.cur_ls.at[chain].set(bad),
+        best_score=states.best_score.at[chain].set(bad))
+
+
+def _npy_files(d: str) -> list[str]:
+    return sorted(f for f in os.listdir(d) if f.endswith(".npy"))
+
+
+def _corrupt_file(path: str, rng: np.random.Generator, mode: str) -> None:
+    size = os.path.getsize(path)
+    if mode == "truncate":
+        with open(path, "r+b") as f:
+            f.truncate(max(size // 2, 1))
+        return
+    # bitflip: flip one byte in the DATA region (past the ~128-byte .npy
+    # header, so the array still parses and only the digest/values change)
+    lo = min(128, max(size - 1, 0))
+    off = int(rng.integers(lo, size)) if size > lo else max(size - 1, 0)
+    with open(path, "r+b") as f:
+        f.seek(off)
+        b = f.read(1)
+        f.seek(off)
+        f.write(bytes([b[0] ^ 0xFF]) if b else b"\xff")
+
+
+def corrupt_checkpoint_dir(directory: str, rng: np.random.Generator, *,
+                           leaf: str = "", mode: str = "bitflip") -> str:
+    """Corrupt one leaf array of the NEWEST checkpoint step in ``directory``
+    (seeded choice when ``leaf`` is empty). Returns the corrupted path."""
+    from ..checkpoint import latest_step
+    step = latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint to corrupt in {directory}")
+    d = os.path.join(directory, f"step_{step:010d}")
+    files = _npy_files(d)
+    if leaf:
+        target = leaf if leaf.endswith(".npy") else leaf + ".npy"
+        if target not in files:
+            raise FileNotFoundError(f"leaf {leaf!r} not in {d} "
+                                    f"(have {files})")
+    else:
+        target = files[int(rng.integers(len(files)))]
+    path = os.path.join(d, target)
+    logger.warning("fault: corrupting checkpoint leaf %s (%s)", path, mode)
+    _corrupt_file(path, rng, mode)
+    return path
+
+
+def corrupt_cache_dir(cache_dir: str, rng: np.random.Generator, *,
+                      mode: str = "truncate") -> str | None:
+    """Corrupt (or delete) one preprocess cache entry under ``cache_dir``.
+    Entries are <cache_dir>/<key>/step_0000000000/*.npy; a seeded entry and
+    leaf are picked. Returns the corrupted path, or None when the cache is
+    empty (a no-op fault, logged)."""
+    import shutil
+    if not os.path.isdir(cache_dir):
+        logger.warning("fault: cache dir %s absent — nothing to corrupt",
+                       cache_dir)
+        return None
+    entries = sorted(e for e in os.listdir(cache_dir)
+                     if os.path.isdir(os.path.join(cache_dir, e)))
+    if not entries:
+        logger.warning("fault: cache dir %s empty — nothing to corrupt",
+                       cache_dir)
+        return None
+    entry = os.path.join(cache_dir, entries[int(rng.integers(len(entries)))])
+    if mode == "delete":
+        logger.warning("fault: deleting cache entry %s", entry)
+        shutil.rmtree(entry)
+        return entry
+    for root, _, files in os.walk(entry):
+        npys = sorted(f for f in files if f.endswith(".npy"))
+        if npys:
+            path = os.path.join(root, npys[int(rng.integers(len(npys)))])
+            logger.warning("fault: truncating cache array %s", path)
+            _corrupt_file(path, rng, "truncate")
+            return path
+    logger.warning("fault: cache entry %s holds no arrays", entry)
+    return entry

@@ -1,4 +1,4 @@
-"""Straggler mitigation.
+"""Straggler mitigation — now wired into the BN path by the run supervisor.
 
 The BN workload is MCMC: chains are statistically independent, so the system
 never *waits* for a slow worker at a correctness barrier. Sync points (the
@@ -13,6 +13,16 @@ Policy implemented here:
 * for LM training the analogue hook is backup-worker dispatch, which the
   launcher exposes as `backup_factor` (redundant data-parallel replicas of the
   slowest shard group — documented, not exercised on 1 CPU).
+
+:func:`rebalance_chains` is the healing primitive behind
+``bn_learn --supervise`` (runtime/supervisor.py): between jitted segments the
+supervisor folds the telemetry collector's stuck/diverged chain flags and its
+own per-chain NaN/inf + progress guards into the ``progressed`` vector, and
+lagging slots are clones of the best chain — positions, (cur_ls, cur_idx)
+caches and consistency planes copied TOGETHER so every derived cache
+describes the cloned order by construction. Donor selection is NaN/inf-SAFE:
+a poisoned chain (non-finite best_score) can be a recipient but never the
+donor.
 """
 from __future__ import annotations
 
@@ -22,7 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["StragglerPolicy", "rebalance_chains"]
+__all__ = ["StragglerPolicy", "rebalance_chains", "best_finite_chain"]
 
 
 @dataclass
@@ -31,19 +41,34 @@ class StragglerPolicy:
     backup_factor: float = 0.0   # fraction of redundant DP replicas (LM path)
 
 
+def best_finite_chain(best_score) -> int:
+    """Index of the best chain among those with FINITE best_score — the only
+    chains allowed to donate state. Falls back to plain argmax when no chain
+    is finite (degenerate: cloning cannot help, but must not crash)."""
+    bs = np.asarray(best_score, np.float64)
+    finite = np.isfinite(bs)
+    if not finite.any():
+        return int(np.argmax(np.nan_to_num(bs, nan=-np.inf)))
+    return int(np.argmax(np.where(finite, bs, -np.inf)))
+
+
 def rebalance_chains(key: jax.Array, states, progressed: np.ndarray,
-                     missed: np.ndarray, policy: StragglerPolicy):
-    """Clone the best chain into straggler slots.
+                     missed: np.ndarray, policy: StragglerPolicy,
+                     return_mask: bool = False):
+    """Clone the best (finite-scored) chain into straggler slots.
 
     states: stacked ChainState (leading axis = chains); progressed: bool (C,)
     whether a chain reported this round; missed: int (C,) consecutive misses.
-    Returns (new_states, new_missed).
+    Returns (new_states, new_missed), or (new_states, new_missed, healed)
+    with ``return_mask`` — ``healed`` is the bool (C,) mask of re-seeded
+    slots (the supervisor logs one ``heal`` telemetry row per True entry and
+    re-seeds the matching trace leaves).
     """
     missed = np.where(progressed, 0, missed + 1)
     lagging = missed >= policy.patience
     if not lagging.any():
-        return states, missed
-    best = int(np.argmax(np.asarray(states.best_score)))
+        return (states, missed, lagging) if return_mask else (states, missed)
+    best = best_finite_chain(states.best_score)
     n = len(missed)
     keys = jax.random.split(key, n)
 
@@ -63,4 +88,6 @@ def rebalance_chains(key: jax.Array, states, progressed: np.ndarray,
     new_states = new_states._replace(
         key=jax.random.wrap_key_data(jnp.asarray(new_keys)))
     missed = np.where(lagging, 0, missed)
+    if return_mask:
+        return new_states, missed, lagging
     return new_states, missed

@@ -19,11 +19,12 @@ not on the iteration cap (the cap stays as the upper bound).
 Stuck/diverged flags reuse the WandbLog rolling-median idea across the
 chain axis: a chain whose segment accept rate or score sits many MADs from
 the chain-population median is flagged (stuck chains are also flagged
-absolutely at ~zero acceptance). Flags are REPORTS, not actions — the
-in-scan ``exchange_step`` already re-seeds the worst chain on its own
-cadence; the flags make that machinery observable (reseeds per slot are
-counted right in the trace) and give the straggler runtime an external
-signal to act on.
+absolutely at ~zero acceptance). Flags are reports here — the in-scan
+``exchange_step`` re-seeds the worst chain on its own cadence, and the
+reseeds-per-slot counter makes that observable — but under ``bn_learn
+--supervise`` the run supervisor (runtime/supervisor.py) ACTS on them:
+flagged chains are healed via straggler cloning between segments, and each
+action lands back in this trace as a ``heal`` row.
 """
 from __future__ import annotations
 
@@ -161,6 +162,32 @@ class Collector:
         self._emit(rec)
         self.last = rec
         return rec
+
+    def heal(self, *, iter: int, chain: int, donor: int,
+             reason: str) -> dict:
+        """One chain-healing event from the run supervisor: ``chain`` was
+        re-seeded as a clone of ``donor`` at global iteration ``iter``."""
+        rec = {"kind": "heal", "run": self.run, "iter": int(iter),
+               "chain": int(chain), "donor": int(donor),
+               "reason": str(reason)}
+        self._emit(rec)
+        return rec
+
+    # ------------------------------------------------------ resume support
+    def state_dict(self) -> dict:
+        """The collector's tiny vote state, persisted in checkpoint metadata
+        by the run supervisor so a crash-resumed run casts bitwise-identical
+        convergence votes to one that never died."""
+        return {"hits": int(self.hits), "prev_iter": int(self._prev_iter),
+                "prev_accepts": (None if self._prev_accepts is None
+                                 else [float(x) for x in self._prev_accepts])}
+
+    def load_state(self, state: dict) -> None:
+        self.hits = int(state.get("hits", 0))
+        self._prev_iter = int(state.get("prev_iter", 0))
+        pa = state.get("prev_accepts")
+        self._prev_accepts = None if pa is None else np.asarray(pa,
+                                                                np.float64)
 
     def finalize(self, *, iters_run: int, stopped_early: bool,
                  **extra) -> dict:

@@ -17,6 +17,10 @@ Row kinds
 * ``segment`` — one per collector check (every ``--check-every`` iterations):
   per-chain score/accept stats, split-R̂ on the score traces, max-R̂ over
   edge marginals, stuck/diverged chain flags, convergence-vote state.
+* ``heal``    — one per chain-healing event under ``bn_learn --supervise``:
+  the run supervisor re-seeded {chain} as a clone of {donor} at global
+  iteration {iter} because of {reason} (nonfinite / stalled / stuck /
+  diverged / lagging).
 * ``final``   — one per run, last row: outcome summary (stopped_early,
   iters_run, final R̂s, best score).
 
@@ -44,6 +48,8 @@ REQUIRED: dict[str, dict[str, type | tuple]] = {
                 "edge_rhat": _NUM, "accept_rates": list,
                 "stuck_chains": list, "diverged_chains": list,
                 "converge_hits": int, "converged": bool},
+    "heal": {"run": str, "iter": int, "chain": int, "donor": int,
+             "reason": str},
     "final": {"run": str, "iters_run": int, "stopped_early": bool,
               "score_rhat": _NUM, "edge_rhat": _NUM},
 }

@@ -158,11 +158,16 @@ def make_tap(n: int, s: int, trace_every: int):
             adj = jax.vmap(
                 lambda r: adjacency_bits_from_ranks(r, off, B, s))(
                     states.cur_idx)
+            # graceful degradation: a poisoned chain (non-finite cached
+            # score) keeps tapping its ring — diagnostics must SEE the NaN
+            # to flag it — but contributes nothing to the posterior edge
+            # accumulator until the supervisor heals it
+            ok = jnp.isfinite(states.score).astype(adj.dtype)
             return tr._replace(
                 scores=tr.scores.at[:, slot].set(states.score),
                 accepts=tr.accepts.at[:, slot].set(states.accepts),
                 taps=tr.taps + 1,
-                edge_counts=tr.edge_counts + adj,
+                edge_counts=tr.edge_counts + adj * ok[:, None, None],
                 edge_taps=tr.edge_taps + 1,
             )
 
@@ -174,9 +179,13 @@ def make_tap(n: int, s: int, trace_every: int):
 def exchange_step_traced(states: ChainState,
                          trace: TraceState) -> tuple[ChainState, TraceState]:
     """core.mcmc.exchange_step + a re-seed count on the recipient slot (the
-    degenerate all-equal ranking is a no-op there and counts nothing here)."""
-    b = jnp.argmax(states.best_score)
-    w = jnp.argmin(states.best_score)
+    degenerate all-equal ranking is a no-op there and counts nothing here).
+    Mirrors exchange_step's NaN/inf-safe masked rank so the counted
+    recipient slot matches the slot the exchange actually re-seeds."""
+    rank = jnp.where(jnp.isfinite(states.best_score), states.best_score,
+                     -jnp.inf)
+    b = jnp.argmax(rank)
+    w = jnp.argmin(rank)
     trace = trace._replace(
         reseeds=trace.reseeds.at[w].add((b != w).astype(jnp.int32)))
     return exchange_step(states), trace
