@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test bench-smoke bench-delta bench-mcmc bench-mcmc-smoke \
+.PHONY: test lint lint-fixtures bench-smoke bench-delta bench-mcmc bench-mcmc-smoke \
         bench-mcmc-sharded bench-mcmc-sharded-smoke \
         bench-preprocess bench-preprocess-smoke \
         bench-preprocess-stream bench-preprocess-stream-smoke \
@@ -12,6 +12,23 @@ export PYTHONPATH := src:$(PYTHONPATH)
 
 test:
 	$(PY) -m pytest -q
+
+# bnlint static analysis (docs/static-analysis.md): retrace, host-sync,
+# pallas-contract, pytree-drift and emit-site rules over the real tree.
+# Exits nonzero on any finding not in analysis/baseline.json (every baseline
+# entry carries a mandatory reason) or suppressed inline.
+lint:
+	$(PY) -m repro.analysis src benchmarks --fail-on-findings
+
+# analyzer self-test: the deliberately-broken fixture corpus must (a) fail
+# the normal gate and (b) trip every rule family (--expect exits nonzero if
+# any listed rule does not fire)
+lint-fixtures:
+	@! $(PY) -m repro.analysis tests/fixtures/bnlint --no-baseline \
+	  --fail-on-findings > /dev/null || \
+	  (echo "lint-fixtures: corpus unexpectedly passed the gate" && exit 1)
+	$(PY) -m repro.analysis tests/fixtures/bnlint --no-baseline \
+	  --expect retrace-eager-switch,retrace-undeclared-static,retrace-loop-varying-static,hostsync-in-hot-path,pallas-spec-mismatch,pallas-interpret-hardcoded,pytree-unregistered-field,telemetry-unknown-kind,bench-unknown-config-key,bench-row-no-config
 
 bench-smoke:
 	$(PY) benchmarks/delta_vs_full.py --smoke

@@ -43,7 +43,7 @@ def run(ps=(0.0, 0.01, 0.05, 0.07, 0.1, 0.15), n: int = 20, m: int = 1000,
         fp, tp = roc_point(out["adjacency"], truth)
         rows.append({"n": n, "m": m, "q": q, "s": s, "iters": iters,
                      "chains": chains, "flip_p": p,
-                     "tp_rate": tp, "fp_rate": fp, "score": out["score"]})
+                     "tp_rate": tp, "fp_rate": fp, "final_score": out["score"]})
     emit("BENCH_faults", rows)
     return rows
 

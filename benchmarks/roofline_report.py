@@ -20,13 +20,18 @@ def run() -> list[dict]:
     for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
         d = json.load(open(path))
         if not d.get("ok"):
-            rows.append({"arch": d.get("arch"), "shape": d.get("shape"),
+            rows.append({"mode": "roofline",
+                         "variant": f"{d.get('arch')}/{d.get('shape')}"
+                                    f"/{d.get('mesh')}",
+                         "arch": d.get("arch"), "shape": d.get("shape"),
                          "mesh": d.get("mesh"), "ERROR": d.get("error")})
             continue
         dom = {"compute": d["t_compute"], "memory": d["t_memory"],
                "collective": d["t_collective"]}[d["bottleneck"]]
         total = max(d["t_compute"], d["t_memory"], d["t_collective"])
         rows.append({
+            "mode": "roofline",
+            "variant": f"{d['arch']}/{d['shape']}/{d['mesh']}",
             "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
             "t_compute_s": d["t_compute"], "t_memory_s": d["t_memory"],
             "t_collective_s": d["t_collective"],

@@ -38,6 +38,7 @@ def run(ns=(15, 17, 19, 21, 23, 25), s: int = 4) -> list[dict]:
         pst, _ = build_pst(nc, s)
         t_lim = time.perf_counter() - t0
         rows.append({
+            "n": n, "s": s, "mode": "table2",
             "n_nodes": n,
             "all_sets": 1 << nc,
             "limited_sets": n_parent_sets(nc, s),

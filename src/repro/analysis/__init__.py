@@ -1,0 +1,33 @@
+"""bnlint — static analysis for the JAX/Pallas reproduction codebase.
+
+A pure-AST pass (analyzed code is parsed, never imported) with five rule
+families tuned to this repo's failure history:
+
+1. retrace hazards   — undeclared static args, eager switch/cond closures
+                       (the PR-5 propose_move segfault pattern)
+2. host-sync         — .item()/np.asarray/float() in code reachable from
+                       jit, scan bodies, shard_map or the segment runner
+3. pallas contracts  — grid/BlockSpec arithmetic, interpret= plumbing,
+                       static VMEM-footprint estimates (vmem.py)
+4. pytree drift      — checkpointed NamedTuples vs the golden leaf
+                       registry (registry.py)
+5. emit sites        — telemetry kinds vs schema.py, bench row keys vs
+                       benchmarks/common.CONFIG_KEYS
+
+Run it with ``python -m repro.analysis src benchmarks --fail-on-findings``
+(the ``make lint`` target). Findings are suppressed inline with
+``# bnlint: disable=<rule-id>`` or recorded in baseline.json with a
+mandatory reason string.
+"""
+from __future__ import annotations
+
+from .engine import (BaselineError, Finding, LintResult, lint, load_baseline,
+                     load_project, write_baseline)
+from .registry import PYTREE_REGISTRY, registered_fields, registered_leaves
+from .rules import CHECKERS, RULES
+
+__all__ = [
+    "BaselineError", "Finding", "LintResult", "lint", "load_baseline",
+    "load_project", "write_baseline", "PYTREE_REGISTRY",
+    "registered_fields", "registered_leaves", "CHECKERS", "RULES",
+]

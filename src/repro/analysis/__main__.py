@@ -1,0 +1,131 @@
+"""bnlint CLI.
+
+    python -m repro.analysis [paths...] [--fail-on-findings] [--json]
+                             [--baseline PATH | --no-baseline]
+                             [--write-baseline] [--expect rule,rule,...]
+                             [--emit-vmem]
+
+Exit codes: 0 clean (or all --expect rules fired), 1 internal/usage error,
+2 unbaselined findings under --fail-on-findings (or missing --expect rule).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from .engine import DEFAULT_BASELINE, BaselineError, lint, write_baseline
+from .rules import RULES
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="bnlint: static analysis for the JAX/Pallas repro repo")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/directories to scan (default: src)")
+    ap.add_argument("--fail-on-findings", action="store_true",
+                    help="exit 2 if any unbaselined finding remains")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="baseline JSON path (default: the package baseline)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline entirely")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="record current unbaselined findings into the "
+                         "baseline (reasons start as TODO and must be "
+                         "filled in)")
+    ap.add_argument("--expect", default="",
+                    help="comma-separated rule ids that MUST fire "
+                         "(fixture self-test mode): exit 0 iff all do")
+    ap.add_argument("--emit-vmem", action="store_true",
+                    help="emit static per-kernel VMEM rows into the BENCH "
+                         "trajectories via benchmarks/common.save")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable findings on stdout")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid, desc in sorted(RULES.items()):
+            print(f"{rid:28s} {desc}")
+        return 0
+
+    paths = args.paths or ["src"]
+    baseline = None if args.no_baseline else args.baseline
+
+    if args.emit_vmem:
+        from .vmem import emit_vmem_rows
+        rows = emit_vmem_rows(paths)
+        for row in rows:
+            print(f"[vmem] {row['variant']:44s} "
+                  f"{row['vmem_mib']:9.4f} MiB "
+                  f"({row['vmem_frac_of_budget']:.1%} of budget)"
+                  + (f"  assumed {row['assumed_dims']}"
+                     if row["assumed_dims"] else ""))
+        print(f"[vmem] {len(rows)} kernel estimate(s) merged into BENCH "
+              "trajectories")
+        return 0
+
+    try:
+        result = lint(paths, baseline_path=baseline)
+    except (BaselineError, FileNotFoundError, SyntaxError) as exc:
+        print(f"bnlint: error: {exc}", file=sys.stderr)
+        return 1
+
+    if args.write_baseline:
+        path = args.baseline
+        write_baseline(path, result.all_findings)
+        print(f"bnlint: wrote {len(result.all_findings)} entrie(s) to "
+              f"{path} — fill in every TODO reason before committing")
+        return 0
+
+    if args.json:
+        print(json.dumps({
+            "new": [f.as_dict() for f in result.new],
+            "baselined": [f.as_dict() for f in result.baselined],
+            "suppressed": [f.as_dict() for f in result.suppressed],
+            "stale_baseline": sorted(result.stale_baseline),
+        }, indent=2, sort_keys=True))
+    else:
+        for f in result.new:
+            print(f.render())
+        if result.baselined:
+            print(f"bnlint: {len(result.baselined)} baselined finding(s) "
+                  "(see baseline.json for reasons)")
+        if result.suppressed:
+            print(f"bnlint: {len(result.suppressed)} inline-suppressed "
+                  "finding(s)")
+        for key in sorted(result.stale_baseline):
+            print(f"bnlint: warning: stale baseline entry (no longer "
+                  f"fires): {key}")
+
+    if args.expect:
+        want = {r.strip() for r in args.expect.split(",") if r.strip()}
+        unknown = want - set(RULES)
+        if unknown:
+            print(f"bnlint: error: unknown rule id(s) in --expect: "
+                  f"{sorted(unknown)}", file=sys.stderr)
+            return 1
+        fired = {f.rule for f in result.all_findings}
+        missing = want - fired
+        if missing:
+            print(f"bnlint: expected rule(s) did not fire: "
+                  f"{sorted(missing)}", file=sys.stderr)
+            return 2
+        print(f"bnlint: all {len(want)} expected rule(s) fired")
+        return 0
+
+    if result.new:
+        n = len(result.new)
+        print(f"bnlint: {n} finding(s)" + (
+            "" if not args.fail_on_findings else
+            " — fix them or baseline with a reason"))
+        if args.fail_on_findings:
+            return 2
+    else:
+        print("bnlint: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

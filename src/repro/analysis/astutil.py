@@ -1,0 +1,236 @@
+"""Shared AST helpers for the bnlint rule engine.
+
+Everything here is pure syntax: no imports of the analysed code are ever
+executed. Helpers resolve the small set of idioms this codebase actually
+uses — ``@functools.partial(jax.jit, static_argnames=...)`` decorators,
+``name = functools.partial(jax.jit, ...)(impl)`` wrapper assignments,
+``kernel = functools.partial(_impl_kernel, **statics)`` aliases feeding
+``pl.pallas_call`` — so the rules stay precise on this repo without trying
+to be a general Python type checker.
+"""
+from __future__ import annotations
+
+import ast
+
+_PARENT = "_bnlint_parent"
+
+
+def add_parents(tree: ast.AST) -> ast.AST:
+    """Attach parent pointers so rules can walk outward from a node."""
+    for parent in ast.walk(tree):
+        for child in ast.iter_child_nodes(parent):
+            setattr(child, _PARENT, parent)
+    return tree
+
+
+def parent(node: ast.AST) -> ast.AST | None:
+    return getattr(node, _PARENT, None)
+
+
+def dotted(node: ast.AST) -> str | None:
+    """'jax.lax.switch'-style dotted name of a Name/Attribute chain."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted(node.value)
+        return f"{base}.{node.attr}" if base else None
+    return None
+
+
+def call_name(node: ast.AST) -> str | None:
+    """Dotted callee name of a Call node (None for computed callees)."""
+    if isinstance(node, ast.Call):
+        return dotted(node.func)
+    return None
+
+
+def qualname(node: ast.AST) -> str:
+    """Dotted chain of enclosing defs/classes + the node's own name (or the
+    nearest enclosing def for anonymous nodes) — the stable baseline anchor."""
+    names = []
+    cur: ast.AST | None = node
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.ClassDef)):
+            names.append(cur.name)
+        cur = parent(cur)
+    return ".".join(reversed(names)) or "<module>"
+
+
+def enclosing_function(node: ast.AST):
+    """Nearest enclosing FunctionDef/AsyncFunctionDef (None at module level)."""
+    cur = parent(node)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return cur
+        cur = parent(cur)
+    return None
+
+
+def names_in(node: ast.AST) -> set[str]:
+    """All Name identifiers loaded anywhere under ``node``."""
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+# --------------------------------------------------------------------- jit
+
+_JIT_NAMES = {"jax.jit", "jit"}
+_PARTIAL_NAMES = {"functools.partial", "partial"}
+
+
+def is_jit_expr(node: ast.AST) -> bool:
+    """True if ``node`` evaluates to jax.jit, possibly through
+    functools.partial — covers ``@jax.jit``, ``@partial(jax.jit, ...)`` and
+    the wrapper half of ``partial(jax.jit, ...)(impl)``."""
+    if dotted(node) in _JIT_NAMES:
+        return True
+    if isinstance(node, ast.Call):
+        cn = call_name(node)
+        if cn in _JIT_NAMES:
+            return True
+        if cn in _PARTIAL_NAMES and node.args:
+            return is_jit_expr(node.args[0])
+    return False
+
+
+def jit_static_names(node: ast.AST) -> tuple[str, ...]:
+    """static_argnames mentioned anywhere under a jit wrapper expression."""
+    out: list[str] = []
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.keyword) and sub.arg == "static_argnames":
+            v = sub.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                out.append(v.value)
+            elif isinstance(v, (ast.Tuple, ast.List)):
+                out.extend(e.value for e in v.elts
+                           if isinstance(e, ast.Constant)
+                           and isinstance(e.value, str))
+    return tuple(out)
+
+
+def jitted_functions(tree: ast.Module) -> dict[str, tuple]:
+    """Map of jit-covered names in a module: ``name -> (funcdef | None,
+    static_argnames)``.
+
+    Covers both spellings used in this repo:
+
+    * decorator: ``@jax.jit`` / ``@functools.partial(jax.jit, ...)``
+    * module-level wrapper assignment:
+      ``public = functools.partial(jax.jit, ...)(_impl)`` — BOTH the public
+      alias and the private impl are recorded as covered (the impl has a
+      jitted entry point; eager callers are expected to use the alias).
+    """
+    funcs: dict[str, ast.FunctionDef] = {}
+    out: dict[str, tuple] = {}
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            funcs[node.name] = node
+            for dec in node.decorator_list:
+                if is_jit_expr(dec):
+                    out[node.name] = (node, jit_static_names(dec))
+    for node in tree.body:
+        if not (isinstance(node, ast.Assign)
+                and isinstance(node.value, ast.Call)):
+            continue
+        call = node.value
+        wrapped, statics = None, ()
+        if is_jit_expr(call.func) and call.args \
+                and isinstance(call.args[0], ast.Name):
+            # partial(jax.jit, ...)(impl)
+            wrapped = call.args[0].id
+            statics = jit_static_names(call.func) or jit_static_names(call)
+        elif call_name(call) in _JIT_NAMES and call.args \
+                and isinstance(call.args[0], ast.Name):
+            # jax.jit(impl, static_argnames=...)
+            wrapped = call.args[0].id
+            statics = jit_static_names(call)
+        if wrapped:
+            fn = funcs.get(wrapped)
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    out[tgt.id] = (fn, statics)
+            out.setdefault(wrapped, (fn, statics))
+    return out
+
+
+def partial_aliases(scope: ast.AST) -> dict[str, tuple[str, set[str]]]:
+    """``alias -> (wrapped_name, bound_kwarg_names)`` for
+    ``alias = functools.partial(fn, **kw)`` assignments under ``scope``."""
+    out: dict[str, tuple[str, set[str]]] = {}
+    for node in ast.walk(scope):
+        if not (isinstance(node, ast.Assign)
+                and isinstance(node.value, ast.Call)):
+            continue
+        call = node.value
+        if call_name(call) in _PARTIAL_NAMES and call.args \
+                and isinstance(call.args[0], ast.Name):
+            bound = {kw.arg for kw in call.keywords if kw.arg}
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    out[tgt.id] = (call.args[0].id, bound)
+    return out
+
+
+def local_functions(scope: ast.AST) -> dict[str, ast.FunctionDef]:
+    """Immediate (non-recursive) function defs in a body-bearing scope."""
+    out = {}
+    for node in getattr(scope, "body", []):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out[node.name] = node
+    return out
+
+
+def own_body_nodes(fn: ast.AST):
+    """Walk a function's body EXCLUDING nested function/class subtrees —
+    nested defs are separate call-graph nodes with their own hotness."""
+    stack = list(getattr(fn, "body", []))
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef, ast.Lambda)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def const_int(node: ast.AST) -> int | None:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+            and not isinstance(node.value, bool):
+        return node.value
+    return None
+
+
+def str_keys(d: ast.AST) -> dict[str, ast.AST]:
+    """Constant-string keys of a Dict literal or dict(...) call."""
+    out: dict[str, ast.AST] = {}
+    if isinstance(d, ast.Dict):
+        for k, v in zip(d.keys, d.values):
+            if isinstance(k, ast.Constant) and isinstance(k.value, str):
+                out[k.value] = v
+    elif isinstance(d, ast.Call) and call_name(d) == "dict":
+        for kw in d.keywords:
+            if kw.arg:
+                out[kw.arg] = kw.value
+    return out
+
+
+def import_map(tree: ast.Module, package: str) -> dict[str, str]:
+    """Alias -> absolute dotted module for a module living in ``package``
+    (e.g. package='repro.core' resolves ``from .order_scoring import x`` and
+    ``from ..telemetry import taps``)."""
+    out: dict[str, str] = {}
+    parts = package.split(".") if package else []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                out[alias.asname or alias.name.split(".")[0]] = alias.name
+        elif isinstance(node, ast.ImportFrom):
+            if node.level:
+                base = parts[:len(parts) - node.level + 1]
+                mod = ".".join(base + ([node.module] if node.module else []))
+            else:
+                mod = node.module or ""
+            for alias in node.names:
+                out[alias.asname or alias.name] = (
+                    f"{mod}.{alias.name}" if mod else alias.name)
+    return out

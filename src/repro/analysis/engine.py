@@ -1,0 +1,214 @@
+"""bnlint rule engine: project loading, findings, baseline and suppression.
+
+Design (docs/static-analysis.md has the user-facing version):
+
+* A **Project** is a set of parsed modules (never imported, only ``ast``)
+  plus the repo root, so cross-file rules (schema kinds, CONFIG_KEYS, the
+  pytree registry) can read their source of truth even when it is outside
+  the scanned paths.
+* A **Finding** is anchored by ``(rule, path, anchor)`` where the anchor is
+  the enclosing def/class qualname (plus an optional discriminator token),
+  NOT a line number — baselines survive unrelated edits to the same file.
+* Two suppression channels: the **baseline file** (shipped next to this
+  package, every entry REQUIRES a non-empty reason string) for accepted
+  findings, and inline ``# bnlint: disable=rule-id -- reason`` comments on
+  (or immediately above) the flagged line for point exemptions.
+"""
+from __future__ import annotations
+
+import ast
+import json
+import os
+import re
+from dataclasses import dataclass, field
+
+from .astutil import add_parents
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.json")
+
+_SUPPRESS_RE = re.compile(r"#\s*bnlint:\s*disable=([\w\-*,]+)")
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str       # rule id, e.g. "retrace-eager-switch"
+    path: str       # repo-relative posix path
+    line: int
+    anchor: str     # stable anchor: qualname[#token]
+    message: str
+
+    @property
+    def key(self) -> str:
+        return f"{self.rule}:{self.path}:{self.anchor}"
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+    def as_dict(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "anchor": self.anchor, "message": self.message}
+
+
+@dataclass
+class Module:
+    relpath: str            # posix, relative to the project root
+    source: str
+    tree: ast.Module
+    package: str            # dotted package for relative-import resolution
+    suppressions: dict[int, set[str]] = field(default_factory=dict)
+
+    @classmethod
+    def load(cls, root: str, relpath: str) -> "Module | None":
+        path = os.path.join(root, relpath)
+        try:
+            with open(path, encoding="utf-8") as f:
+                source = f.read()
+            tree = add_parents(ast.parse(source, filename=relpath))
+        except (OSError, SyntaxError):
+            return None
+        sup: dict[int, set[str]] = {}
+        for i, line in enumerate(source.splitlines(), start=1):
+            m = _SUPPRESS_RE.search(line)
+            if m:
+                sup[i] = {r.strip() for r in m.group(1).split(",") if r.strip()}
+        return cls(relpath=relpath, source=source, tree=tree,
+                   package=_package_of(relpath), suppressions=sup)
+
+    def suppressed(self, finding: Finding) -> bool:
+        for ln in (finding.line, finding.line - 1):
+            rules = self.suppressions.get(ln)
+            if rules and ({"*"} & rules or finding.rule in rules):
+                return True
+        return False
+
+
+def _package_of(relpath: str) -> str:
+    """Dotted package of a file under src/ (empty elsewhere)."""
+    parts = relpath.replace(os.sep, "/").split("/")
+    if parts and parts[0] == "src":
+        parts = parts[1:]
+    return ".".join(parts[:-1])
+
+
+class Project:
+    """Parsed view of the scanned paths + on-demand access to out-of-scan
+    source-of-truth files (schema.py, benchmarks/common.py, core/mcmc.py)."""
+
+    def __init__(self, root: str, modules: list[Module]):
+        self.root = root
+        self.modules = modules
+        self._by_path = {m.relpath: m for m in modules}
+        self._external: dict[str, Module | None] = {}
+
+    def find(self, suffix: str) -> Module | None:
+        """Scanned module whose relpath ends with ``suffix``, else load it
+        from disk under the project root (parsed, never imported)."""
+        suffix = suffix.replace(os.sep, "/")
+        for m in self.modules:
+            if m.relpath.replace(os.sep, "/").endswith(suffix):
+                return m
+        if suffix not in self._external:
+            rel = suffix.lstrip("/")
+            self._external[suffix] = (Module.load(self.root, rel)
+                                      if os.path.exists(
+                                          os.path.join(self.root, rel))
+                                      else None)
+        return self._external[suffix]
+
+    def module_for(self, finding: Finding) -> Module | None:
+        return self._by_path.get(finding.path)
+
+
+def load_project(paths: list[str], root: str | None = None) -> Project:
+    root = os.path.abspath(root or os.getcwd())
+    files: list[str] = []
+    for p in paths:
+        ap = p if os.path.isabs(p) else os.path.join(root, p)
+        if os.path.isfile(ap) and ap.endswith(".py"):
+            files.append(ap)
+        elif os.path.isdir(ap):
+            for dirpath, dirnames, filenames in os.walk(ap):
+                dirnames[:] = sorted(d for d in dirnames
+                                     if d not in {"__pycache__", ".git"})
+                files.extend(os.path.join(dirpath, f)
+                             for f in sorted(filenames) if f.endswith(".py"))
+    modules = []
+    for f in files:
+        rel = os.path.relpath(f, root).replace(os.sep, "/")
+        mod = Module.load(root, rel)
+        if mod is not None:
+            modules.append(mod)
+    return Project(root, modules)
+
+
+# ------------------------------------------------------------------ baseline
+
+class BaselineError(ValueError):
+    """Malformed baseline file (missing reason, wrong shape)."""
+
+
+def load_baseline(path: str) -> dict[str, str]:
+    """``finding.key -> reason``. Every entry must carry a non-empty reason —
+    a suppression nobody can justify is a bug magnet, not a baseline."""
+    if not os.path.exists(path):
+        return {}
+    with open(path, encoding="utf-8") as f:
+        data = json.load(f)
+    entries = data.get("findings", []) if isinstance(data, dict) else data
+    out: dict[str, str] = {}
+    for e in entries:
+        for fld in ("rule", "path", "anchor", "reason"):
+            if not str(e.get(fld, "")).strip():
+                raise BaselineError(
+                    f"baseline entry {e!r} is missing a non-empty {fld!r} "
+                    "(every baselined finding needs a stated reason)")
+        out[f"{e['rule']}:{e['path']}:{e['anchor']}"] = e["reason"]
+    return out
+
+
+def write_baseline(path: str, findings: list[Finding],
+                   reasons: dict[str, str] | None = None) -> None:
+    reasons = reasons or {}
+    entries = [{"rule": f.rule, "path": f.path, "anchor": f.anchor,
+                "reason": reasons.get(f.key, "TODO: justify or fix")}
+               for f in sorted(set(findings), key=lambda f: f.key)]
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump({"version": 1, "findings": entries}, fh, indent=1)
+        fh.write("\n")
+
+
+@dataclass
+class LintResult:
+    new: list[Finding]                  # unbaselined, unsuppressed
+    baselined: list[Finding]
+    suppressed: list[Finding]
+    stale_baseline: list[str]           # baseline keys that no longer fire
+    all_findings: list[Finding]
+
+
+def run_rules(project: Project) -> list[Finding]:
+    from . import rules
+    findings: list[Finding] = []
+    for checker in rules.CHECKERS:
+        findings.extend(checker(project))
+    return sorted(set(findings), key=lambda f: (f.path, f.line, f.rule))
+
+
+def lint(paths: list[str], root: str | None = None,
+         baseline_path: str | None = DEFAULT_BASELINE) -> LintResult:
+    project = load_project(paths, root)
+    findings = run_rules(project)
+    baseline = load_baseline(baseline_path) if baseline_path else {}
+    new, base, sup = [], [], []
+    for f in findings:
+        mod = project.module_for(f)
+        if mod is not None and mod.suppressed(f):
+            sup.append(f)
+        elif f.key in baseline:
+            base.append(f)
+        else:
+            new.append(f)
+    fired = {f.key for f in findings}
+    stale = sorted(k for k in baseline if k not in fired)
+    return LintResult(new=new, baselined=base, suppressed=sup,
+                      stale_baseline=stale, all_findings=findings)

@@ -1,0 +1,46 @@
+"""Golden pytree-leaf registry for checkpointed NamedTuple state.
+
+Every leaf-count migration in this repo's history (9 → 13 ChainState
+leaves across the bitmask/adaptive engine, +7 TraceState leaves for
+telemetry) had to be hand-backfilled in every checkpoint path via the
+checkpointer's ``allow_missing`` restore. This registry makes the layout a
+DECLARED contract: the ``pytree-unregistered-field`` bnlint rule compares
+the real class definitions against it, so a field added or reordered
+without (a) bumping the registry version, (b) updating the expected field
+tuple here, and (c) keeping an ``allow_missing=True`` backfill path in the
+restore code, fails ``make lint`` before it can strand old checkpoints.
+
+Field ORDER is part of the contract, not just the count: checkpoint leaves
+are restored positionally-by-name (``leaf_<index>``), and new fields must be
+appended LAST so pre-migration snapshots keep their alignment (see the
+ChainState docstring in core/mcmc.py).
+"""
+from __future__ import annotations
+
+__all__ = ["PYTREE_REGISTRY", "registered_fields", "registered_leaves"]
+
+PYTREE_REGISTRY: dict[str, dict] = {
+    "ChainState": {
+        "module": "src/repro/core/mcmc.py",
+        "version": 3,        # v1: 8 leaves; v2: +cur_ls (9); v3: +bitmask/adaptive (13)
+        "fields": ("key", "pos", "score", "cur_idx", "best_score",
+                   "best_idx", "best_pos", "accepts", "cur_ls",
+                   "mask_planes", "win_idx", "adapt_err", "step"),
+    },
+    "TraceState": {
+        "module": "src/repro/telemetry/taps.py",
+        "version": 1,        # v1: 7 leaves, appended after ChainState's 13
+        "fields": ("scores", "accepts", "taps", "win_hist",
+                   "edge_counts", "edge_taps", "reseeds"),
+    },
+}
+
+
+def registered_fields(name: str) -> tuple[str, ...]:
+    return tuple(PYTREE_REGISTRY[name]["fields"])
+
+
+def registered_leaves(name: str) -> int:
+    """Leaf count of a registered state type (every field is one array
+    leaf — NamedTuples of arrays flatten 1:1)."""
+    return len(PYTREE_REGISTRY[name]["fields"])

@@ -1,0 +1,44 @@
+"""bnlint rule families. Each module exposes CHECKERS: list of
+``checker(project) -> list[Finding]``; RULES maps every rule id to a
+one-line description (used by the CLI listing and docs)."""
+from __future__ import annotations
+
+from . import emitsites, hostsync, pallas, pytree, retrace
+
+RULES: dict[str, str] = {
+    retrace.RULE_EAGER:
+        "eager lax.switch/cond with fresh branch closures and no jitted "
+        "entry point (re-traces per call — the PR-5 segfault pattern)",
+    retrace.RULE_STATIC:
+        "jitted function uses a parameter statically without declaring it "
+        "in static_argnames",
+    retrace.RULE_LOOP:
+        "static argument of a jitted function varies with an enclosing "
+        "Python loop (recompile per iteration)",
+    hostsync.RULE:
+        ".item()/np.asarray/float()/int()/bool()/device_get inside code "
+        "reachable from jit, scan bodies, shard_map or the segment runner",
+    pallas.RULE_SPEC:
+        "pallas_call grid/BlockSpec/out_shape arithmetic inconsistency",
+    pallas.RULE_INTERPRET:
+        "pallas_call interpret= missing or hardcoded instead of plumbed",
+    pytree.RULE_FIELD:
+        "checkpointed NamedTuple fields drifted from the golden registry "
+        "without a version bump",
+    pytree.RULE_STALE:
+        "pytree registry entry points at a class that no longer exists",
+    pytree.RULE_BACKFILL:
+        "no allow_missing checkpoint-restore backfill path left under src/",
+    emitsites.RULE_KIND:
+        "telemetry row kind not declared in telemetry/schema.py REQUIRED",
+    emitsites.RULE_CONFIG:
+        "bench row key is an undeclared near-miss of a CONFIG_KEYS entry",
+    emitsites.RULE_NO_CONFIG:
+        "bench row has no CONFIG_KEYS field (merges by full-JSON identity)",
+}
+
+CHECKERS = (retrace.CHECKERS + hostsync.CHECKERS + pallas.CHECKERS
+            + pytree.CHECKERS + emitsites.CHECKERS)
+
+__all__ = ["RULES", "CHECKERS", "retrace", "hostsync", "pallas", "pytree",
+           "emitsites"]

@@ -1,0 +1,205 @@
+"""Schema / bench emit-site rules (family 5).
+
+Both trajectory formats in this repo are append-only JSON with a declared
+row identity, and both have a history of silent-drift bugs (the PAD_SET
+sentinel, the pre-merge ``save`` clobbering gate rows). These rules check
+the two declarations at every emit site, reading the source of truth from
+the AST (never importing it):
+
+* ``telemetry-unknown-kind`` — a row literal carrying ``kind`` (alongside
+  ``schema`` or ``run``, the telemetry row signature) whose kind is not
+  declared in ``telemetry/schema.py``'s REQUIRED table: the collector
+  would refuse it at runtime, deep into a run.
+* ``bench-unknown-config-key`` — a row passed to ``benchmarks/common.save``
+  / ``emit`` with a key that is a near-miss of a CONFIG_KEYS entry
+  (case/underscore variant or one edit away): the row would silently stop
+  merging by that field and clobber or duplicate trajectory rows.
+* ``bench-row-no-config`` — an emitted row with NO CONFIG_KEYS field at
+  all: it merges by full-JSON identity, so re-measuring appends a
+  duplicate instead of replacing the stale measurement.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..astutil import call_name, qualname, str_keys
+from ..engine import Finding, Project
+
+RULE_KIND = "telemetry-unknown-kind"
+RULE_CONFIG = "bench-unknown-config-key"
+RULE_NO_CONFIG = "bench-row-no-config"
+
+# fallbacks if the source-of-truth files are missing from the tree
+_DEFAULT_KINDS = ("meta", "stage", "segment", "heal", "final")
+_DEFAULT_CONFIG_KEYS = ("n", "q", "s", "m", "S", "iters", "chains", "window",
+                        "devices", "n_devices", "tp", "dp", "chunk", "block",
+                        "mode", "variant", "scorer", "delta", "prune_delta",
+                        "max_keep", "backend", "flip_p")
+
+
+def declared_kinds(project: Project) -> tuple[str, ...]:
+    """Row kinds declared in telemetry/schema.py's REQUIRED dict literal."""
+    mod = project.find("src/repro/telemetry/schema.py")
+    if mod is None:
+        return _DEFAULT_KINDS
+    for node in ast.walk(mod.tree):
+        if isinstance(node, (ast.Assign, ast.AnnAssign)):
+            tgts = (node.targets if isinstance(node, ast.Assign)
+                    else [node.target])
+            if any(isinstance(t, ast.Name) and t.id == "REQUIRED"
+                   for t in tgts) and isinstance(node.value, ast.Dict):
+                return tuple(k.value for k in node.value.keys
+                             if isinstance(k, ast.Constant)
+                             and isinstance(k.value, str))
+    return _DEFAULT_KINDS
+
+
+def declared_config_keys(project: Project) -> tuple[str, ...]:
+    mod = project.find("benchmarks/common.py")
+    if mod is None:
+        return _DEFAULT_CONFIG_KEYS
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Assign):
+            if any(isinstance(t, ast.Name) and t.id == "CONFIG_KEYS"
+                   for t in node.targets) \
+                    and isinstance(node.value, (ast.Tuple, ast.List)):
+                return tuple(e.value for e in node.value.elts
+                             if isinstance(e, ast.Constant)
+                             and isinstance(e.value, str))
+    return _DEFAULT_CONFIG_KEYS
+
+
+def check_telemetry_kinds(project: Project) -> list[Finding]:
+    kinds = set(declared_kinds(project))
+    findings = []
+    for mod in project.modules:
+        if mod.relpath.endswith("telemetry/schema.py"):
+            continue                     # the declaration site itself
+        for node in ast.walk(mod.tree):
+            keys = str_keys(node)
+            if "kind" not in keys:
+                continue
+            if not ({"schema", "run"} & set(keys)):
+                continue                 # not a telemetry row literal
+            kv = keys["kind"]
+            if isinstance(kv, ast.Constant) and isinstance(kv.value, str) \
+                    and kv.value not in kinds:
+                findings.append(Finding(
+                    RULE_KIND, mod.relpath, node.lineno,
+                    f"{qualname(node)}#kind={kv.value}",
+                    f"telemetry row kind '{kv.value}' is not declared in "
+                    f"telemetry/schema.py REQUIRED ({sorted(kinds)}): the "
+                    "collector will reject this row at runtime. Declare "
+                    "the kind (with its required fields) in the schema "
+                    "first."))
+    return findings
+
+
+def _edit_distance_leq1(a: str, b: str) -> bool:
+    if a == b:
+        return True
+    la, lb = len(a), len(b)
+    if abs(la - lb) > 1:
+        return False
+    if la == lb:                         # one substitution
+        return sum(x != y for x, y in zip(a, b)) <= 1
+    if la > lb:
+        a, b, la, lb = b, a, lb, la
+    i = j = diff = 0                     # one insertion
+    while i < la and j < lb:
+        if a[i] == b[j]:
+            i += 1
+        else:
+            diff += 1
+            if diff > 1:
+                return False
+        j += 1
+    return True
+
+
+def _norm(key: str) -> str:
+    return key.replace("_", "").lower()
+
+
+def _row_dicts(rows_arg: ast.AST, fn: ast.AST | None) -> list[ast.AST]:
+    """Dict literals flowing into a save/emit rows argument: inline dict,
+    inline list of dicts, or a local name assigned/appended to in ``fn``."""
+    out = []
+
+    def collect(node: ast.AST) -> None:
+        if isinstance(node, ast.Dict) or (
+                isinstance(node, ast.Call) and call_name(node) == "dict"):
+            out.append(node)
+        elif isinstance(node, (ast.List, ast.Tuple)):
+            for e in node.elts:
+                collect(e)
+        elif isinstance(node, (ast.ListComp, ast.GeneratorExp)):
+            collect(node.elt)
+
+    collect(rows_arg)
+    if isinstance(rows_arg, ast.Name) and fn is not None:
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and any(
+                    isinstance(t, ast.Name) and t.id == rows_arg.id
+                    for t in node.targets):
+                collect(node.value)
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "append" \
+                    and isinstance(node.func.value, ast.Name) \
+                    and node.func.value.id == rows_arg.id:
+                for a in node.args:
+                    collect(a)
+    return out
+
+
+def check_bench_config_keys(project: Project) -> list[Finding]:
+    config = declared_config_keys(project)
+    norm_map = {_norm(k): k for k in config}
+    findings = []
+    for mod in project.modules:
+        if mod.relpath.endswith("benchmarks/common.py"):
+            continue
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            cn = (call_name(node) or "").rsplit(".", 1)[-1]
+            if cn not in {"save", "emit"} or len(node.args) < 2:
+                continue
+            from ..astutil import enclosing_function
+            fn = enclosing_function(node)
+            for row in _row_dicts(node.args[1], fn):
+                keys = list(str_keys(row))
+                if not keys:
+                    continue
+                bad = []
+                for k in keys:
+                    if k in config:
+                        continue
+                    near = norm_map.get(_norm(k))
+                    if near is None:
+                        near = next((c for c in config
+                                     if _edit_distance_leq1(k, c)), None)
+                    if near:
+                        bad.append((k, near))
+                for k, near in bad:
+                    findings.append(Finding(
+                        RULE_CONFIG, mod.relpath, row.lineno,
+                        f"{qualname(node)}#{k}",
+                        f"bench row key '{k}' looks like CONFIG_KEYS entry "
+                        f"'{near}' but is not declared: the row will not "
+                        "merge by this field (smoke runs would clobber "
+                        "gate rows). Use the declared key or add the new "
+                        "key to benchmarks/common.CONFIG_KEYS."))
+                if not any(k in config for k in keys):
+                    findings.append(Finding(
+                        RULE_NO_CONFIG, mod.relpath, row.lineno,
+                        f"{qualname(node)}#no-config",
+                        "bench row carries no CONFIG_KEYS field at all: it "
+                        "merges by full-JSON identity, so every re-run "
+                        "appends a duplicate row instead of replacing the "
+                        "stale measurement."))
+    return findings
+
+
+CHECKERS = [check_telemetry_kinds, check_bench_config_keys]

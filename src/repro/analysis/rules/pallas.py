@@ -1,0 +1,235 @@
+"""Pallas kernel-contract rules (family 3).
+
+Every ``pl.pallas_call`` site is parsed into a :class:`PallasSite` (also
+consumed by analysis/vmem.py for the static VMEM-footprint estimates) and
+checked for the contracts that are cheap to get wrong and expensive to
+debug on hardware:
+
+* ``pallas-spec-mismatch`` — grid/BlockSpec arithmetic drift: an index_map
+  whose arity differs from ``len(grid)``, an index_map returning a tuple of
+  different rank than its block shape, a block shape whose rank differs
+  from the corresponding ``out_shape``, mismatched out_specs/out_shape
+  counts, or an operand count different from ``len(in_specs)``.
+* ``pallas-interpret-hardcoded`` — ``interpret=`` missing or a literal
+  True/False instead of a plumbed parameter: kernels must stay runnable in
+  interpret mode on CPU CI AND compiled on TPU, from the same call site
+  (every kernel in this repo threads ``interpret`` through its public
+  wrapper for exactly that reason).
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+
+from ..astutil import call_name, enclosing_function, parent, qualname
+from ..engine import Finding, Project
+
+RULE_SPEC = "pallas-spec-mismatch"
+RULE_INTERPRET = "pallas-interpret-hardcoded"
+
+_PALLAS_SUFFIX = "pallas_call"
+
+
+@dataclass
+class BlockSpecInfo:
+    node: ast.Call
+    block: ast.AST | None           # the block-shape tuple expression
+    index_map: ast.AST | None       # usually a Lambda
+
+    @property
+    def block_rank(self) -> int | None:
+        if isinstance(self.block, (ast.Tuple, ast.List)):
+            return len(self.block.elts)
+        return None
+
+
+@dataclass
+class PallasSite:
+    mod: object                     # engine.Module
+    call: ast.Call                  # the pl.pallas_call(...) call itself
+    fn: ast.AST | None              # enclosing function def
+    grid: ast.AST | None
+    in_specs: list[BlockSpecInfo] = field(default_factory=list)
+    out_specs: list[BlockSpecInfo] = field(default_factory=list)
+    out_shapes: list[ast.Call] = field(default_factory=list)
+    scratch_shapes: list[ast.AST] = field(default_factory=list)
+    interpret: ast.AST | None = None
+    operands: list[ast.AST] = field(default_factory=list)
+
+    @property
+    def anchor(self) -> str:
+        return qualname(self.call)
+
+    @property
+    def kernel_name(self) -> str:
+        f = self.fn
+        return f.name if isinstance(f, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)) else "<module>"
+
+
+def _as_blockspec(node: ast.AST) -> BlockSpecInfo | None:
+    if isinstance(node, ast.Call) and \
+            (call_name(node) or "").rsplit(".", 1)[-1] == "BlockSpec":
+        block = node.args[0] if node.args else None
+        imap = node.args[1] if len(node.args) > 1 else None
+        for kw in node.keywords:
+            if kw.arg == "index_map":
+                imap = kw.value
+            if kw.arg == "block_shape":
+                block = kw.value
+        return BlockSpecInfo(node=node, block=block, index_map=imap)
+    return None
+
+
+def _spec_list(node: ast.AST) -> list[BlockSpecInfo]:
+    out = []
+    elts = node.elts if isinstance(node, (ast.List, ast.Tuple)) else [node]
+    for e in elts:
+        bs = _as_blockspec(e)
+        if bs is not None:
+            out.append(bs)
+    return out
+
+
+def _shape_list(node: ast.AST) -> list[ast.Call]:
+    elts = node.elts if isinstance(node, (ast.List, ast.Tuple)) else [node]
+    return [e for e in elts
+            if isinstance(e, ast.Call)
+            and (call_name(e) or "").endswith("ShapeDtypeStruct")]
+
+
+def resolve_local(name_node: ast.AST, fn: ast.AST | None) -> ast.AST:
+    """Follow one local ``x = <tuple literal>`` assignment inside ``fn`` so
+    ``grid = (C, m // bm); ... grid=grid`` still checks."""
+    if not isinstance(name_node, ast.Name) or fn is None:
+        return name_node
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name) and tgt.id == name_node.id:
+                    return node.value
+    return name_node
+
+
+def iter_pallas_sites(project: Project) -> list[PallasSite]:
+    sites = []
+    for mod in project.modules:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if not (call_name(node) or "").endswith(_PALLAS_SUFFIX):
+                continue
+            fn = enclosing_function(node)
+            site = PallasSite(mod=mod, call=node, fn=fn, grid=None)
+            for kw in node.keywords:
+                if kw.arg == "grid":
+                    site.grid = resolve_local(kw.value, fn)
+                elif kw.arg == "in_specs":
+                    site.in_specs = _spec_list(kw.value)
+                elif kw.arg == "out_specs":
+                    site.out_specs = _spec_list(kw.value)
+                elif kw.arg == "out_shape":
+                    site.out_shapes = _shape_list(kw.value)
+                elif kw.arg == "scratch_shapes":
+                    v = kw.value
+                    site.scratch_shapes = (list(v.elts) if isinstance(
+                        v, (ast.List, ast.Tuple)) else [v])
+                elif kw.arg == "interpret":
+                    site.interpret = kw.value
+            outer = parent(node)
+            if isinstance(outer, ast.Call) and outer.func is node:
+                site.operands = list(outer.args)
+            sites.append(site)
+    return sites
+
+
+def _grid_len(site: PallasSite) -> int | None:
+    g = site.grid
+    if isinstance(g, (ast.Tuple, ast.List)):
+        return len(g.elts)
+    if isinstance(g, (ast.Constant, ast.Name, ast.BinOp)):
+        return 1 if not isinstance(g, ast.Name) else None
+    return None
+
+
+def _lambda_arity(node: ast.AST) -> int | None:
+    if isinstance(node, ast.Lambda):
+        a = node.args
+        return len(a.posonlyargs) + len(a.args)
+    return None
+
+
+def _lambda_ret_rank(node: ast.AST) -> int | None:
+    if isinstance(node, ast.Lambda):
+        return (len(node.body.elts)
+                if isinstance(node.body, (ast.Tuple, ast.List)) else 1)
+    return None
+
+
+def _shape_rank(struct: ast.Call) -> int | None:
+    if struct.args and isinstance(struct.args[0], (ast.Tuple, ast.List)):
+        return len(struct.args[0].elts)
+    return None
+
+
+def check_pallas_contracts(project: Project) -> list[Finding]:
+    findings = []
+    for site in iter_pallas_sites(project):
+        mod, line = site.mod, site.call.lineno
+        anchor = site.anchor
+
+        def spec(msg: str, ln: int = line, token: str = "") -> None:
+            findings.append(Finding(
+                RULE_SPEC, mod.relpath, ln,
+                f"{anchor}#{token}" if token else anchor,
+                f"pallas_call in '{site.kernel_name}': {msg}"))
+
+        G = _grid_len(site)
+        all_specs = [("in_specs", i, s) for i, s in enumerate(site.in_specs)]
+        all_specs += [("out_specs", i, s) for i, s in
+                      enumerate(site.out_specs)]
+        for kind, i, s in all_specs:
+            ar = _lambda_arity(s.index_map)
+            if G is not None and ar is not None and ar != G:
+                spec(f"{kind}[{i}] index_map takes {ar} args but the grid "
+                     f"has {G} dims — every grid axis must be consumed",
+                     s.node.lineno, f"{kind}{i}-arity")
+            rr = _lambda_ret_rank(s.index_map)
+            br = s.block_rank
+            if rr is not None and br is not None and rr != br:
+                spec(f"{kind}[{i}] index_map returns {rr} coordinates for a "
+                     f"rank-{br} block shape", s.node.lineno,
+                     f"{kind}{i}-rank")
+        if site.out_specs and site.out_shapes and \
+                len(site.out_specs) != len(site.out_shapes):
+            spec(f"{len(site.out_specs)} out_specs but "
+                 f"{len(site.out_shapes)} out_shape entries",
+                 token="out-count")
+        for i, (s, struct) in enumerate(zip(site.out_specs,
+                                            site.out_shapes)):
+            br, sr = s.block_rank, _shape_rank(struct)
+            if br is not None and sr is not None and br != sr:
+                spec(f"out_specs[{i}] block is rank {br} but out_shape[{i}] "
+                     f"is rank {sr}", s.node.lineno, f"outshape{i}-rank")
+        if site.in_specs and site.operands and \
+                len(site.in_specs) != len(site.operands):
+            spec(f"{len(site.operands)} operands passed but "
+                 f"{len(site.in_specs)} in_specs declared", token="operands")
+
+        if site.interpret is None:
+            findings.append(Finding(
+                RULE_INTERPRET, mod.relpath, line, f"{anchor}#interpret",
+                f"pallas_call in '{site.kernel_name}' does not pass "
+                "interpret=: the kernel cannot run on CPU CI. Thread an "
+                "interpret parameter through the public wrapper."))
+        elif isinstance(site.interpret, ast.Constant):
+            findings.append(Finding(
+                RULE_INTERPRET, mod.relpath, line, f"{anchor}#interpret",
+                f"pallas_call in '{site.kernel_name}' hardcodes "
+                f"interpret={site.interpret.value!r}: plumb it from the "
+                "caller so the same site runs interpreted on CPU and "
+                "compiled on TPU."))
+    return findings
+
+
+CHECKERS = [check_pallas_contracts]

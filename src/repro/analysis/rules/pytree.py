@@ -1,0 +1,122 @@
+"""Pytree leaf-registry rules (family 4).
+
+The checkpoint layout is positional: ChainState's 13 leaves come first,
+TraceState's 7 ride after them, and every past layout migration (8 → 9 →
+13 → +7) relied on the checkpointer's ``allow_missing`` backfill to keep
+old snapshots restorable. These rules pin that contract to the golden
+registry (analysis/registry.py):
+
+* ``pytree-unregistered-field`` — a registered NamedTuple's real field
+  tuple (names AND order) differs from the registry: the author must bump
+  the registry version, append (never insert) the new fields, and keep the
+  ``allow_missing`` backfill path working before lint passes.
+* ``pytree-registry-stale`` — the registry points at a class/file that no
+  longer exists (the registry itself rotted).
+* ``pytree-no-backfill-restore`` — no ``allow_missing=True`` restore call
+  remains anywhere under src/: the schema-evolution path old checkpoints
+  depend on has been dropped. Only checked when the real state modules are
+  part of the scan (fixture corpora skip it).
+"""
+from __future__ import annotations
+
+import ast
+
+from ..astutil import call_name, dotted
+from ..engine import Finding, Project
+from ..registry import PYTREE_REGISTRY
+
+RULE_FIELD = "pytree-unregistered-field"
+RULE_STALE = "pytree-registry-stale"
+RULE_BACKFILL = "pytree-no-backfill-restore"
+
+_RESTORE_CALLS = {"restore_checkpoint", "restore_latest_verified"}
+
+
+def _namedtuple_fields(cls: ast.ClassDef) -> tuple[str, ...] | None:
+    is_nt = any((dotted(b) or "").rsplit(".", 1)[-1] == "NamedTuple"
+                for b in cls.bases)
+    if not is_nt:
+        return None
+    fields = []
+    for node in cls.body:
+        if isinstance(node, ast.AnnAssign) and isinstance(node.target,
+                                                          ast.Name):
+            fields.append(node.target.id)
+    return tuple(fields)
+
+
+def check_pytree_registry(project: Project) -> list[Finding]:
+    findings = []
+    seen: set[str] = set()
+    for mod in project.modules:
+        for node in mod.tree.body:
+            if not isinstance(node, ast.ClassDef) \
+                    or node.name not in PYTREE_REGISTRY:
+                continue
+            fields = _namedtuple_fields(node)
+            if fields is None:
+                continue
+            seen.add(node.name)
+            entry = PYTREE_REGISTRY[node.name]
+            expected = tuple(entry["fields"])
+            if fields == expected:
+                continue
+            added = [f for f in fields if f not in expected]
+            removed = [f for f in expected if f not in fields]
+            detail = []
+            if added:
+                detail.append(f"added {added}")
+            if removed:
+                detail.append(f"removed {removed}")
+            if not detail:
+                detail.append("reordered fields")
+            findings.append(Finding(
+                RULE_FIELD, mod.relpath, node.lineno, node.name,
+                f"'{node.name}' has {len(fields)} leaves but the golden "
+                f"registry v{entry['version']} declares {len(expected)} "
+                f"({'; '.join(detail)}). Checkpoint layout is positional: "
+                "append new fields LAST, bump the registry version and "
+                "field tuple in repro/analysis/registry.py, and verify the "
+                "allow_missing backfill path restores pre-migration "
+                "snapshots."))
+
+    # registry-stale + backfill checks only make sense against the real
+    # tree, signalled by the registered module being part of the scan
+    for name, entry in PYTREE_REGISTRY.items():
+        home = entry["module"]
+        in_scan = any(m.relpath.endswith(home.split("/")[-1])
+                      and home in m.relpath for m in project.modules)
+        if in_scan and name not in seen:
+            findings.append(Finding(
+                RULE_STALE, home, 1, name,
+                f"registry declares '{name}' in {home} but no such "
+                "NamedTuple was found there — update or remove the "
+                "registry entry."))
+
+    chain_home = PYTREE_REGISTRY["ChainState"]["module"]
+    scans_real_tree = any(m.relpath == chain_home for m in project.modules)
+    if scans_real_tree:
+        has_backfill = False
+        for mod in project.modules:
+            if not mod.relpath.startswith("src/"):
+                continue
+            for node in ast.walk(mod.tree):
+                if isinstance(node, ast.Call) and \
+                        (call_name(node) or "").rsplit(".", 1)[-1] \
+                        in _RESTORE_CALLS:
+                    for kw in node.keywords:
+                        if kw.arg == "allow_missing" and not (
+                                isinstance(kw.value, ast.Constant)
+                                and kw.value.value is False):
+                            has_backfill = True
+        if not has_backfill:
+            findings.append(Finding(
+                RULE_BACKFILL, chain_home, 1, "allow_missing",
+                "no checkpoint restore call under src/ passes "
+                "allow_missing: the schema-evolution backfill path that "
+                "keeps pre-migration snapshots restorable has been "
+                "dropped."))
+    return findings
+
+
+CHECKERS = [check_pytree_registry]

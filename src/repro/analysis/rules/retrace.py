@@ -1,0 +1,239 @@
+"""Retrace-hazard rules (family 1).
+
+The seed-era bug these encode: ``propose_move`` built fresh ``lax.switch``
+branch closures on every eager Python call, so each call re-traced and
+re-compiled the switch; ~800 property-test calls exhausted the LLVM JIT
+code-mapping budget and segfaulted the suite (fixed in PR 5 by jitting the
+public entry point with ``static_argnames=("window",)``).
+
+* ``retrace-eager-switch`` — a module-level function that builds
+  ``lax.switch``/``lax.cond`` branches from locally-created closures and has
+  NO jitted entry point (neither decorated nor wrapped by a module-level
+  ``partial(jax.jit, ...)`` assignment). Every eager call re-traces the
+  branches. In-scan step helpers that are only ever called from inside a
+  jitted run loop belong in the baseline with that reason.
+* ``retrace-undeclared-static`` — a jitted function using a parameter in a
+  Python-level static context (``if``/``while`` test, ``range``, ``assert``,
+  shape argument) without declaring it in ``static_argnames``: either a
+  trace-time TypeError, or — worse — silent retrace-per-value.
+* ``retrace-loop-varying-static`` — a call to a known-jitted function inside
+  a Python loop passing a loop-varying value for a STATIC parameter: one
+  full recompile per iteration.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..astutil import (call_name, jitted_functions, names_in, own_body_nodes,
+                       qualname)
+from ..engine import Finding, Project
+
+RULE_EAGER = "retrace-eager-switch"
+RULE_STATIC = "retrace-undeclared-static"
+RULE_LOOP = "retrace-loop-varying-static"
+
+_SWITCH_NAMES = {"jax.lax.switch", "lax.switch", "jax.lax.cond", "lax.cond"}
+
+# attribute accesses that yield trace-STATIC Python values even on tracers:
+# `n = pos.shape[0]; jnp.arange(n)` retraces only when the shape does, which
+# is exactly when jit would retrace anyway — not an undeclared-static hazard
+_SAFE_ATTRS = {"shape", "ndim", "size", "dtype", "itemsize"}
+
+
+def _dynamic_names(expr: ast.AST) -> set[str]:
+    """names_in(expr) minus names reached only through a trace-static
+    attribute chain (x.shape[0], x.ndim, ...)."""
+    safe_ids: set[int] = set()
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Attribute) and node.attr in _SAFE_ATTRS:
+            for sub in ast.walk(node.value):
+                if isinstance(sub, ast.Name):
+                    safe_ids.add(id(sub))
+    return {n.id for n in ast.walk(expr)
+            if isinstance(n, ast.Name) and id(n) not in safe_ids}
+
+# shape-position argument indices per callee suffix (None = every arg)
+_SHAPE_ARGS: dict[str, tuple | None] = {
+    "zeros": (0,), "ones": (0,), "full": (0,), "empty": (0,),
+    "arange": None, "ShapeDtypeStruct": (0,), "broadcasted_iota": (1,),
+    "reshape": None, "iota": (1,),
+}
+
+
+def _branch_exprs(call: ast.Call,
+                  fn: ast.AST | None = None) -> list[ast.AST]:
+    name = call_name(call)
+    if name and name.endswith("switch") and len(call.args) >= 2:
+        b = call.args[1]
+        if isinstance(b, ast.Name) and fn is not None:
+            # follow one local assignment: branches = [swap, insert, ...]
+            for node in own_body_nodes(fn):
+                if isinstance(node, ast.Assign) and any(
+                        isinstance(t, ast.Name) and t.id == b.id
+                        for t in node.targets):
+                    b = node.value
+                    break
+        return list(b.elts) if isinstance(b, (ast.List, ast.Tuple)) else [b]
+    if name and name.endswith("cond"):
+        return list(call.args[1:3])
+    return []
+
+
+def _fresh_closures(branches: list[ast.AST], local_names: set[str]) -> bool:
+    for b in branches:
+        if isinstance(b, (ast.Lambda, ast.ListComp, ast.GeneratorExp)):
+            return True
+        if isinstance(b, ast.Name) and b.id in local_names:
+            return True
+        if isinstance(b, ast.Call):          # branch(j)-style factory calls
+            return True
+    return False
+
+
+def check_eager_switch(project: Project) -> list[Finding]:
+    findings = []
+    for mod in project.modules:
+        jitted = jitted_functions(mod.tree)
+        for fn in mod.tree.body:
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if fn.name in jitted:
+                continue                     # has a jitted entry point
+            local = {n.name for n in ast.walk(fn)
+                     if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+                     and n is not fn}
+            for node in own_body_nodes(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                if call_name(node) not in _SWITCH_NAMES:
+                    continue
+                if _fresh_closures(_branch_exprs(node, fn), local):
+                    findings.append(Finding(
+                        RULE_EAGER, mod.relpath, fn.lineno, fn.name,
+                        f"'{fn.name}' builds {call_name(node)} branches from "
+                        "fresh closures but has no jitted entry point: every "
+                        "eager call re-traces and re-compiles the branches "
+                        "(the PR-5 propose_move segfault pattern). Wrap it "
+                        "with jax.jit (static_argnames for config args) or "
+                        "baseline it with the reason it is only ever called "
+                        "inside a traced scan."))
+                    break
+    return findings
+
+
+def _param_names(fn: ast.FunctionDef) -> list[str]:
+    a = fn.args
+    return [p.arg for p in (*a.posonlyargs, *a.args, *a.kwonlyargs)]
+
+
+def _tainted_locals(fn: ast.FunctionDef, seeds: set[str]) -> dict[str, str]:
+    """name -> originating parameter, via one round of simple assignments."""
+    origin = {s: s for s in seeds}
+    for _ in range(2):                       # two rounds: a = f(p); b = g(a)
+        for node in own_body_nodes(fn):
+            if not isinstance(node, ast.Assign):
+                continue
+            used = _dynamic_names(node.value) & set(origin)
+            if not used:
+                continue
+            src = origin[sorted(used)[0]]
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    origin.setdefault(tgt.id, src)
+    return origin
+
+
+def check_undeclared_static(project: Project) -> list[Finding]:
+    findings = []
+    for mod in project.modules:
+        for name, (fn, statics) in jitted_functions(mod.tree).items():
+            if fn is None or name != fn.name:
+                continue                     # report once, on the impl
+            params = set(_param_names(fn))
+            undeclared = params - set(statics)
+            if not undeclared:
+                continue
+            origin = _tainted_locals(fn, undeclared)
+            hits: dict[str, tuple[int, str]] = {}
+
+            def note(expr: ast.AST, why: str) -> None:
+                for nm in _dynamic_names(expr) & set(origin):
+                    hits.setdefault(origin[nm],
+                                    (getattr(expr, "lineno", fn.lineno), why))
+
+            for node in own_body_nodes(fn):
+                if isinstance(node, (ast.If, ast.While)):
+                    note(node.test, "Python control flow on its value")
+                elif isinstance(node, ast.Assert):
+                    note(node.test, "assert on its value")
+                elif isinstance(node, ast.Call):
+                    cn = call_name(node) or ""
+                    if cn == "range":
+                        for a in node.args:
+                            note(a, "range() bound")
+                    else:
+                        idxs = _SHAPE_ARGS.get(cn.rsplit(".", 1)[-1])
+                        if cn.rsplit(".", 1)[-1] in _SHAPE_ARGS:
+                            args = (node.args if idxs is None
+                                    else [node.args[i] for i in idxs
+                                          if i < len(node.args)])
+                            for a in args:
+                                note(a, f"shape argument of {cn}")
+            for pname, (line, why) in sorted(hits.items()):
+                findings.append(Finding(
+                    RULE_STATIC, mod.relpath, line, f"{fn.name}#{pname}",
+                    f"jitted '{fn.name}' uses parameter '{pname}' in a "
+                    f"static context ({why}) but does not declare it in "
+                    "static_argnames: tracing either fails or silently "
+                    "re-traces per value."))
+    return findings
+
+
+def check_loop_varying_static(project: Project) -> list[Finding]:
+    # project-wide map: simple callable name -> (funcdef|None, statics)
+    jit_map: dict[str, tuple] = {}
+    for mod in project.modules:
+        for name, info in jitted_functions(mod.tree).items():
+            if info[1]:
+                jit_map.setdefault(name, info)
+
+    findings = []
+    for mod in project.modules:
+        for loop in ast.walk(mod.tree):
+            if not isinstance(loop, (ast.For, ast.While)):
+                continue
+            loop_vars = (names_in(loop.target)
+                         if isinstance(loop, ast.For) else set())
+            if not loop_vars:
+                continue
+            for node in ast.walk(loop):
+                if not isinstance(node, ast.Call):
+                    continue
+                cn = (call_name(node) or "").rsplit(".", 1)[-1]
+                info = jit_map.get(cn)
+                if info is None:
+                    continue
+                fn, statics = info
+                static_args: list[tuple[str, ast.AST]] = [
+                    (kw.arg, kw.value) for kw in node.keywords
+                    if kw.arg in statics]
+                if fn is not None:
+                    pnames = _param_names(fn)
+                    static_args += [
+                        (pnames[i], a) for i, a in enumerate(node.args)
+                        if i < len(pnames) and pnames[i] in statics]
+                for pname, val in static_args:
+                    if names_in(val) & loop_vars:
+                        findings.append(Finding(
+                            RULE_LOOP, mod.relpath, node.lineno,
+                            f"{qualname(node)}#{cn}.{pname}",
+                            f"static argument '{pname}' of jitted '{cn}' "
+                            "varies with the enclosing Python loop: one "
+                            "full recompile per iteration. Hoist the "
+                            "compile out of the loop or make the argument "
+                            "traced."))
+    return findings
+
+
+CHECKERS = [check_eager_switch, check_undeclared_static,
+            check_loop_varying_static]

@@ -1,0 +1,17 @@
+"""Fixture: bench rows with a near-miss config key and with no config at all.
+
+'flipp' is one edit from the declared CONFIG_KEYS entry 'flip_p': the row
+silently stops merging by flip rate and a smoke run clobbers the gate row.
+The second row carries no config field, so it merges by full-JSON identity
+and every re-run appends a duplicate.
+"""
+from benchmarks.common import save
+
+
+def run():
+    rows = [{"n": 20, "m": 1000, "flipp": 0.1,   # expect: bench-unknown-config-key
+             "seconds": 1.23}]
+    save("BENCH_fixture", rows)
+    save("BENCH_fixture", [{"seconds": 4.56,     # expect: bench-row-no-config
+                            "label": "warm"}])
+    return rows

@@ -1,0 +1,36 @@
+"""Fixture: host syncs inside a lax.scan body and a jitted helper.
+
+Each marked line either fails at trace time or forces a blocking
+device→host transfer per scan iteration.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _accumulate(carry, x):
+    total, best = carry
+    step = float(total)                      # expect: hostsync-in-hot-path
+    host = np.asarray(x)                     # expect: hostsync-in-hot-path
+    flag = x.sum().item()                    # expect: hostsync-in-hot-path
+    return (total + x, jnp.maximum(best, x)), (step, host, flag)
+
+
+def run_chain(xs):
+    init = (jnp.zeros(()), jnp.zeros(()))
+    return jax.lax.scan(_accumulate, init, xs)
+
+
+@jax.jit
+def normalize(x):
+    return x / _norm_of(x)
+
+
+def _norm_of(x):                             # hot transitively via normalize
+    return float(jnp.linalg.norm(x))         # expect: hostsync-in-hot-path
+
+
+def drain(history):
+    """Host-side boundary code — np.asarray here is the designed drain and
+    must NOT be flagged (negative control for reachability)."""
+    return [np.asarray(h) for h in history]

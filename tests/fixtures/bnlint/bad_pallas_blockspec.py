@@ -1,0 +1,30 @@
+"""Fixture: pallas_call grid/BlockSpec arithmetic drift + hardcoded interpret.
+
+The index_map of the first in_spec consumes one grid axis but the grid has
+two; the out block is rank 3 against a rank-2 out_shape; interpret=True is
+baked in so the site can never compile on TPU.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = x_ref[...] @ w_ref[...]
+
+
+def broken_matmul(x, w, *, block_m: int = 128):
+    M, K = x.shape
+    N = w.shape[1]
+    return pl.pallas_call(                   # expect: pallas-spec-mismatch (x3)
+        _kernel,
+        grid=(M // block_m, N // block_m),
+        in_specs=[
+            pl.BlockSpec((block_m, K), lambda i: (i, 0)),          # arity 1 != 2
+            pl.BlockSpec((K, block_m), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_m, 1),              # rank 3
+                               lambda i, j: (i, j)),               # 2 coords
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),       # rank 2
+        interpret=True,                      # expect: pallas-interpret-hardcoded
+    )(x, w)

@@ -1,0 +1,23 @@
+"""Fixture: a checkpointed NamedTuple that drifted from the golden registry.
+
+This ChainState inserts a field in the middle and drops two — the
+positional checkpoint layout would silently misassign every later leaf on
+restore.
+"""
+from typing import NamedTuple
+
+
+class ChainState(NamedTuple):                # expect: pytree-unregistered-field
+    key: object
+    pos: object
+    score: object
+    temperature: object                      # inserted mid-layout, unregistered
+    cur_idx: object
+    best_score: object
+    best_idx: object
+    best_pos: object
+    accepts: object
+    cur_ls: object
+    mask_planes: object
+    win_idx: object
+    # adapt_err and step dropped

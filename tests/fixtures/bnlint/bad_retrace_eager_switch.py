@@ -1,0 +1,53 @@
+"""Fixture: the PR-5 propose_move retrace pattern, verbatim shape.
+
+A module-level function that builds lax.switch branches from fresh local
+closures on every call, with NO jitted entry point — each eager call
+re-traces and re-compiles all branches. ~800 property-test calls of
+exactly this shape exhausted the LLVM JIT code-mapping budget and
+segfaulted the seed-era suite.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def propose_move(key, pos, window):          # expect: retrace-eager-switch
+    n = pos.shape[0]
+
+    def swap(k):
+        i = jax.random.randint(k, (), 0, n)
+        return pos.at[i].set(pos[(i + 1) % n])
+
+    def insert(k):
+        return jnp.roll(pos, 1)
+
+    def reverse(k):
+        return pos[::-1]
+
+    kind = jax.random.randint(key, (), 0, 3)
+    branches = [swap, insert, reverse]
+    return jax.lax.switch(kind, branches, key)
+
+
+@jax.jit
+def stepped_walk(pos, window):               # expect: retrace-undeclared-static
+    out = pos
+    for _ in range(window):                  # Python loop bound on a traced arg
+        out = out + 1
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def tiled_sum(x, block):
+    acc = jnp.zeros((block,))                # declared static: fine
+    for _ in range(block):
+        acc = acc + x[:block]
+    return acc
+
+
+def sweep(xs):
+    total = 0.0
+    for b in (128, 256, 512):                # expect: retrace-loop-varying-static
+        total = total + tiled_sum(xs, block=b).sum()
+    return total

@@ -1,0 +1,20 @@
+"""Fixture: telemetry row with an undeclared kind.
+
+'wibble' is not in telemetry/schema.py REQUIRED — the collector rejects
+the row at runtime, deep into a run.
+"""
+
+
+def emit_progress(collector, run_id, step):
+    collector._emit({                        # expect: telemetry-unknown-kind
+        "schema": "bn-telemetry/v1",
+        "kind": "wibble",
+        "run": run_id,
+        "step": step,
+    })
+
+
+def emit_ok(collector, run_id):
+    collector._emit({"schema": "bn-telemetry/v1", "kind": "segment",
+                     "run": run_id, "seg": 0, "iters_done": 0,
+                     "wall_s": 0.0})         # declared kind: must NOT flag

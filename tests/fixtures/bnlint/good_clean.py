@@ -1,0 +1,47 @@
+"""Fixture: negative control — idiomatic code that must produce ZERO
+findings. Every pattern here is the blessed version of a hazard the other
+fixtures trip."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _step_impl(pos, window):
+    n = pos.shape[0]                         # shape-derived: trace-static
+    idx = jnp.arange(n)
+    out = pos
+    for _ in range(window):                  # window IS declared static
+        out = out + idx
+    return out
+
+
+step = functools.partial(jax.jit, static_argnames=("window",))(_step_impl)
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def doubled(x, *, block_m: int = 128, interpret: bool = False):
+    M, K = x.shape
+    return pl.pallas_call(
+        _kernel,
+        grid=(M // block_m,),
+        in_specs=[pl.BlockSpec((block_m, K), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_m, K), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, K), jnp.float32),
+        interpret=interpret,                 # plumbed, not hardcoded
+    )(x)
+
+
+def drain_to_host(rows):
+    """Boundary code, not reachable from any traced root."""
+    return np.asarray(rows)
+
+
+def emit_segment(collector, run_id):
+    collector._emit({"schema": "bn-telemetry/v1", "kind": "segment",
+                     "run": run_id, "seg": 1})

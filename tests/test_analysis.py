@@ -1,0 +1,199 @@
+"""bnlint: per-rule fixture tests, registry regression, baseline/suppression
+round-trips, and the meta-test that the analyzer runs clean over src/."""
+import json
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import (PYTREE_REGISTRY, RULES, lint, registered_leaves,
+                            write_baseline)
+from repro.analysis.engine import BaselineError, load_baseline, load_project
+from repro.analysis.vmem import estimate_project
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXTURES = os.path.join("tests", "fixtures", "bnlint")
+
+
+def _findings(*relpaths, rule=None):
+    paths = [os.path.join(FIXTURES, p) for p in relpaths] or [FIXTURES]
+    res = lint(paths, root=REPO, baseline_path=None)
+    fs = res.all_findings
+    return [f for f in fs if f.rule == rule] if rule else fs
+
+
+# ---------------------------------------------------------------- per-rule
+
+
+def test_pr5_eager_retrace_replica_is_flagged():
+    fs = _findings("bad_retrace_eager_switch.py", rule="retrace-eager-switch")
+    assert any(f.anchor == "propose_move" for f in fs), \
+        "the PR-5 propose_move pattern must be flagged"
+
+
+def test_undeclared_static_range_bound():
+    fs = _findings("bad_retrace_eager_switch.py",
+                   rule="retrace-undeclared-static")
+    assert any("window" in f.anchor for f in fs)
+
+
+def test_loop_varying_static():
+    fs = _findings("bad_retrace_eager_switch.py",
+                   rule="retrace-loop-varying-static")
+    assert any("tiled_sum.block" in f.anchor for f in fs)
+
+
+def test_hostsync_in_scan_body():
+    fs = _findings("bad_hostsync_scan.py", rule="hostsync-in-hot-path")
+    lines = {f.line for f in fs}
+    assert {13, 14, 15} <= lines, f"scan-body syncs missed: {sorted(lines)}"
+    assert any("_norm_of" in f.anchor for f in fs), \
+        "transitively-hot helper missed"
+    assert not any("drain" in f.anchor for f in fs), \
+        "host-side boundary code must NOT be flagged"
+
+
+def test_pallas_blockspec_mismatches():
+    fs = _findings("bad_pallas_blockspec.py", rule="pallas-spec-mismatch")
+    msgs = " | ".join(f.message for f in fs)
+    assert "index_map takes 1 args but the grid has 2" in msgs
+    assert "rank 3 but out_shape[0] is rank 2" in msgs
+
+
+def test_pallas_interpret_hardcoded():
+    fs = _findings("bad_pallas_blockspec.py",
+                   rule="pallas-interpret-hardcoded")
+    assert len(fs) == 1 and "interpret=True" in fs[0].message
+
+
+def test_pytree_unregistered_field():
+    fs = _findings("bad_pytree_field.py", rule="pytree-unregistered-field")
+    assert len(fs) == 1
+    assert "temperature" in fs[0].message
+    assert "adapt_err" in fs[0].message and "step" in fs[0].message
+
+
+def test_telemetry_unknown_kind():
+    fs = _findings("bad_telemetry_kind.py", rule="telemetry-unknown-kind")
+    assert len(fs) == 1 and "wibble" in fs[0].message, \
+        "undeclared kind flagged once; the declared 'segment' row is clean"
+
+
+def test_bench_config_rules():
+    near = _findings("bad_bench_config.py", rule="bench-unknown-config-key")
+    assert len(near) == 1 and "flipp" in near[0].message \
+        and "flip_p" in near[0].message
+    none = _findings("bad_bench_config.py", rule="bench-row-no-config")
+    assert len(none) == 1
+
+
+def test_clean_fixture_has_zero_findings():
+    assert _findings("good_clean.py") == []
+
+
+# ---------------------------------------------------- registry regression
+
+
+def test_registry_pins_chainstate_13_and_tracestate_7():
+    assert registered_leaves("ChainState") == 13
+    assert registered_leaves("TraceState") == 7
+
+
+def test_registry_matches_live_namedtuples():
+    from repro.core.mcmc import ChainState
+    from repro.telemetry.taps import TraceState
+    assert ChainState._fields == PYTREE_REGISTRY["ChainState"]["fields"]
+    assert TraceState._fields == PYTREE_REGISTRY["TraceState"]["fields"]
+    # the positional checkpoint layout counts jax pytree leaves, so pin the
+    # leaf counts too (one leaf per field for array-valued states)
+    chain = ChainState(*[jnp.zeros(()) for _ in ChainState._fields])
+    trace = TraceState(*[jnp.zeros(()) for _ in TraceState._fields])
+    import jax
+    assert len(jax.tree_util.tree_leaves(chain)) == 13
+    assert len(jax.tree_util.tree_leaves(trace)) == 7
+
+
+# ------------------------------------------------- baseline & suppression
+
+
+def test_baseline_requires_reasons(tmp_path):
+    p = tmp_path / "baseline.json"
+    p.write_text(json.dumps({"findings": [
+        {"rule": "r", "path": "p.py", "anchor": "f", "reason": "  "}]}))
+    with pytest.raises(BaselineError):
+        load_baseline(str(p))
+
+
+def test_baseline_roundtrip_and_staleness(tmp_path):
+    fs = _findings("bad_telemetry_kind.py")
+    p = tmp_path / "baseline.json"
+    write_baseline(str(p), fs, {f.key: "fixture corpus" for f in fs})
+    res = lint([os.path.join(FIXTURES, "bad_telemetry_kind.py")], root=REPO,
+               baseline_path=str(p))
+    assert res.new == [] and len(res.baselined) == len(fs)
+    # the same baseline against a clean file reports every entry as stale
+    res2 = lint([os.path.join(FIXTURES, "good_clean.py")], root=REPO,
+                baseline_path=str(p))
+    assert set(res2.stale_baseline) == {f.key for f in fs}
+
+
+def test_inline_suppression_comment(tmp_path):
+    src = ('def emit(c, run):\n'
+           '    c._emit({"schema": "s", "kind": "zork",'
+           ' "run": run})  # bnlint: disable=telemetry-unknown-kind\n')
+    f = tmp_path / "suppressed.py"
+    f.write_text(src)
+    res = lint([str(f)], root=str(tmp_path), baseline_path=None)
+    assert res.new == [] and len(res.suppressed) == 1
+
+
+def test_shipped_baseline_entries_all_have_reasons():
+    from repro.analysis.engine import DEFAULT_BASELINE
+    entries = load_baseline(DEFAULT_BASELINE)
+    assert entries, "shipped baseline should document the in-scan helpers"
+    for key, reason in entries.items():
+        assert len(reason) > 40, f"{key}: reason too thin to justify anything"
+
+
+# ----------------------------------------------------------- integration
+
+
+def test_src_is_clean_under_shipped_baseline():
+    res = lint(["src", "benchmarks"], root=REPO)
+    assert res.new == [], "unbaselined findings in src/:\n" + "\n".join(
+        f.render() for f in res.new)
+    assert res.stale_baseline == []
+
+
+def test_cli_fails_on_fixture_corpus():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", FIXTURES, "--no-baseline",
+         "--fail-on-findings"],
+        cwd=REPO, capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")})
+    assert proc.returncode == 2, proc.stdout + proc.stderr
+
+
+def test_rules_listing_is_complete():
+    assert len(RULES) == 12
+    fired = {f.rule for f in _findings()}
+    assert fired <= set(RULES)
+
+
+# ------------------------------------------------------------------ vmem
+
+
+def test_vmem_estimates_cover_every_kernel():
+    project = load_project(["src/repro/kernels", "src/repro/preprocess"],
+                           root=REPO)
+    rows = estimate_project(project)
+    names = {r["variant"] for r in rows}
+    assert {"count_pallas", "flash_attention_pallas",
+            "order_score_window_pallas", "fused_scores_pallas"} <= names
+    for r in rows:
+        assert r["mode"] == "static"
+        assert 0 < r["vmem_bytes"] < 16 * 2**20, \
+            f"{r['variant']} estimate implausible: {r['vmem_bytes']}"
+        assert r["vmem_frac_of_budget"] < 1.0
