@@ -8,7 +8,8 @@ export PYTHONPATH := src:$(PYTHONPATH)
         bench-preprocess-stream bench-preprocess-stream-smoke \
         bench-telemetry bench-telemetry-smoke telemetry-smoke \
         bench-faults bench-faults-smoke \
-        bench-supervisor bench-supervisor-smoke chaos-smoke
+        bench-supervisor bench-supervisor-smoke chaos-smoke \
+        bench-serve bench-serve-smoke serve-smoke
 
 test:
 	$(PY) -m pytest -q
@@ -95,6 +96,23 @@ bench-supervisor-smoke:
 # result; poisoned/stalled chains must heal; all traces re-validate
 chaos-smoke:
 	$(PY) -m repro.launch.chaos
+
+# posterior-service scheduling overhead: K jobs sequential vs interleaved
+# through the FleetScheduler (gate >= 90% aggregate iters/sec at n = 32);
+# rows merge into BENCH_mcmc.json with mode="serve"
+bench-serve:
+	$(PY) benchmarks/serve_bench.py
+
+bench-serve-smoke:
+	$(PY) benchmarks/serve_bench.py --smoke
+
+# end-to-end posterior-service gate: in-process bn_serve on an ephemeral
+# port; two synthetic datasets (one duplicated — must dedup to the same job
+# id), polled to convergence, every response validated against the
+# bn-service/v1 schema, artifacts asserted bitwise-equal to standalone
+# same-seed runs, offline bn_query round-trip, clean shutdown
+serve-smoke:
+	$(PY) -m repro.launch.serve_smoke
 
 # end-to-end telemetry wiring check: a short --telemetry --stop-on-converge
 # run, then schema re-validation of the emitted JSONL trace

@@ -7,9 +7,10 @@ the two declarations at every emit site, reading the source of truth from
 the AST (never importing it):
 
 * ``telemetry-unknown-kind`` — a row literal carrying ``kind`` (alongside
-  ``schema`` or ``run``, the telemetry row signature) whose kind is not
-  declared in ``telemetry/schema.py``'s REQUIRED table: the collector
-  would refuse it at runtime, deep into a run.
+  ``schema`` or ``run``, the schema-row signature) whose kind is not
+  declared in any REQUIRED table (``telemetry/schema.py`` for trace rows,
+  ``service/schema.py`` for bn-service responses): the validator would
+  refuse it at runtime, deep into a run.
 * ``bench-unknown-config-key`` — a row passed to ``benchmarks/common.save``
   / ``emit`` with a key that is a near-miss of a CONFIG_KEYS entry
   (case/underscore variant or one edit away): the row would silently stop
@@ -37,21 +38,31 @@ _DEFAULT_CONFIG_KEYS = ("n", "q", "s", "m", "S", "iters", "chains", "window",
                         "max_keep", "backend", "flip_p")
 
 
+# every schema module declaring a REQUIRED kind table; rows anywhere in the
+# tree may carry any declared kind (both schemas validate at emit time)
+_SCHEMA_PATHS = ("src/repro/telemetry/schema.py",
+                 "src/repro/service/schema.py")
+
+
 def declared_kinds(project: Project) -> tuple[str, ...]:
-    """Row kinds declared in telemetry/schema.py's REQUIRED dict literal."""
-    mod = project.find("src/repro/telemetry/schema.py")
-    if mod is None:
-        return _DEFAULT_KINDS
-    for node in ast.walk(mod.tree):
-        if isinstance(node, (ast.Assign, ast.AnnAssign)):
-            tgts = (node.targets if isinstance(node, ast.Assign)
-                    else [node.target])
-            if any(isinstance(t, ast.Name) and t.id == "REQUIRED"
-                   for t in tgts) and isinstance(node.value, ast.Dict):
-                return tuple(k.value for k in node.value.keys
-                             if isinstance(k, ast.Constant)
-                             and isinstance(k.value, str))
-    return _DEFAULT_KINDS
+    """Row kinds declared in the REQUIRED dict literal of every schema
+    module (telemetry rows and bn-service responses share the
+    ``schema`` + ``kind`` envelope)."""
+    kinds: list[str] = []
+    for path in _SCHEMA_PATHS:
+        mod = project.find(path)
+        if mod is None:
+            continue
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.Assign, ast.AnnAssign)):
+                tgts = (node.targets if isinstance(node, ast.Assign)
+                        else [node.target])
+                if any(isinstance(t, ast.Name) and t.id == "REQUIRED"
+                       for t in tgts) and isinstance(node.value, ast.Dict):
+                    kinds.extend(k.value for k in node.value.keys
+                                 if isinstance(k, ast.Constant)
+                                 and isinstance(k.value, str))
+    return tuple(kinds) if kinds else _DEFAULT_KINDS
 
 
 def declared_config_keys(project: Project) -> tuple[str, ...]:
@@ -73,8 +84,9 @@ def check_telemetry_kinds(project: Project) -> list[Finding]:
     kinds = set(declared_kinds(project))
     findings = []
     for mod in project.modules:
-        if mod.relpath.endswith("telemetry/schema.py"):
-            continue                     # the declaration site itself
+        if any(mod.relpath.endswith(p.split("/", 1)[-1])
+               for p in _SCHEMA_PATHS):
+            continue                     # the declaration sites themselves
         for node in ast.walk(mod.tree):
             keys = str_keys(node)
             if "kind" not in keys:
@@ -87,11 +99,12 @@ def check_telemetry_kinds(project: Project) -> list[Finding]:
                 findings.append(Finding(
                     RULE_KIND, mod.relpath, node.lineno,
                     f"{qualname(node)}#kind={kv.value}",
-                    f"telemetry row kind '{kv.value}' is not declared in "
-                    f"telemetry/schema.py REQUIRED ({sorted(kinds)}): the "
-                    "collector will reject this row at runtime. Declare "
-                    "the kind (with its required fields) in the schema "
-                    "first."))
+                    f"schema row kind '{kv.value}' is not declared in any "
+                    f"REQUIRED table ({sorted(kinds)}; telemetry/schema.py "
+                    "for trace rows, service/schema.py for bn-service "
+                    "responses): the validator will reject this row at "
+                    "runtime. Declare the kind (with its required fields) "
+                    "in the right schema first."))
     return findings
 
 

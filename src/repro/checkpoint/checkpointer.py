@@ -1,5 +1,8 @@
 """Fault-tolerant checkpointing: device-agnostic (host numpy), atomic
-(write-to-temp + rename), asynchronous (background writer thread), elastic
+(unique write-to-temp + ``os.replace`` — safe under CONCURRENT writers
+sharing one directory, e.g. deduped service jobs racing on a cache entry:
+each stages in its own tmp dir and the second publisher wins whole),
+asynchronous (background writer thread), elastic
 (restore re-shards onto whatever mesh is active — checkpoints carry no device
 topology), and VERIFIED (per-leaf content digests in the manifest).
 
@@ -27,6 +30,7 @@ import os
 import shutil
 import threading
 import time
+import uuid
 from typing import Any
 
 import jax
@@ -98,9 +102,13 @@ def save_checkpoint(directory: str, step: int, tree: Any,
     the bytes on disk; the file write itself is wrapped in io_retry."""
     io_retry(os.makedirs, directory, exist_ok=True, what="mkdir")
     final = os.path.join(directory, f"step_{step:010d}")
-    tmp = final + ".tmp"
-    if os.path.exists(tmp):
-        shutil.rmtree(tmp)
+    # UNIQUE staging dir per writer: concurrent jobs sharing a checkpoint or
+    # cache directory (service/jobs.py) must never interleave writes into one
+    # tmp path — with the old shared `final + ".tmp"` two same-key cache
+    # writers could publish a MIXED tree that passes no digest. A leaked tmp
+    # from a crashed writer is invisible to latest_step (the .tmp suffix) and
+    # harmless.
+    tmp = f"{final}.{os.getpid():x}.{uuid.uuid4().hex[:8]}.tmp"
     os.makedirs(tmp)
     names, leaves, _ = _flatten_with_paths(tree)
     dtypes, digests = [], {}
@@ -125,9 +133,18 @@ def save_checkpoint(directory: str, step: int, tree: Any,
         with open(os.path.join(tmp, _MANIFEST), "w") as f:
             json.dump(manifest, f)
     io_retry(write_manifest, what=_MANIFEST)
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    io_retry(os.rename, tmp, final, what="publish")   # atomic publish
+
+    def publish():
+        # atomic publish; if another writer of the SAME entry raced us (or a
+        # previous save of this step exists), drop the stale target and
+        # replace it — second writer wins with a COMPLETE tree either way,
+        # readers never observe a partial or mixed checkpoint
+        try:
+            os.replace(tmp, final)
+        except OSError:
+            shutil.rmtree(final, ignore_errors=True)
+            os.replace(tmp, final)
+    io_retry(publish, what="publish")
     return final
 
 

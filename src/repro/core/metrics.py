@@ -1,10 +1,14 @@
-"""Accuracy metrics: ROC points (paper §VI, Figs. 9–11) and posterior edge
-marginals from the telemetry edge-count accumulator."""
+"""Accuracy metrics: ROC points (paper §VI, Figs. 9–11), posterior edge
+marginals from the telemetry edge-count accumulator, and the posterior
+summary graphs the query layer serves (service/query.py, ``bn_learn
+--emit-consensus``): the MAP DAG under a fixed order (:func:`map_dag`) and
+the thresholded consensus graph (:func:`consensus_graph`)."""
 from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["roc_point", "structural_hamming", "edge_posterior"]
+__all__ = ["roc_point", "structural_hamming", "edge_posterior", "map_dag",
+           "consensus_graph"]
 
 
 def _as_adjacency(a, name: str) -> np.ndarray:
@@ -77,3 +81,73 @@ def edge_posterior(edge_counts: np.ndarray, n_samples: int) -> np.ndarray:
     p = counts / total if total else np.zeros_like(counts)
     np.fill_diagonal(p, 0.0)
     return p
+
+
+def map_dag(st, pos) -> np.ndarray:
+    """MAP adjacency under a fixed order: per node, the argmax-scoring
+    parent set CONSISTENT with ``pos`` (every parent precedes the child).
+
+    ``st`` is either representation of the score table — a
+    preprocess.SparseScoreTable (packed pruned lists; O(n·K) per node) or a
+    dense core.scores.ScoreTable (O(n·S·s), small-n path) — duck-typed on
+    ``kept_parents``. ``pos`` is the (n,) position vector the sampler
+    carries (pos[v] = position of node v in the order). Fed the walk's
+    ``best_pos`` and the walk's own table, this reproduces exactly the
+    adjacency the engine reports via ``best_idx`` (the scorer's per-node
+    argmax is the same maximisation), but it is callable offline from
+    artifacts alone — which is what the service query layer needs. Ties
+    resolve to the LOWEST rank, matching the jitted scorers' argmax.
+    Returns an (n, n) int8 adjacency, adj[parent, child] = 1.
+    """
+    pos = np.asarray(pos)
+    if pos.ndim != 1:
+        raise ValueError(f"pos must be a flat (n,) order, got {pos.shape}")
+    n = pos.shape[0]
+    adj = np.zeros((n, n), np.int8)
+    if hasattr(st, "kept_parents"):             # pruned representation
+        kp = np.asarray(st.kept_parents)        # (n, K, s) node ids, -1 pad
+        kl = np.asarray(st.kept_ls)             # (n, K) f32, NEG_INF pad
+        ki = np.asarray(st.kept_idx)            # (n, K) ranks, -1 pad
+        for i in range(n):
+            real = kp[i] >= 0                   # (K, s)
+            ok = (ki[i] >= 0) & np.where(
+                real, pos[np.clip(kp[i], 0, n - 1)] < pos[i], True).all(1)
+            if not ok.any():                    # rank 0 is always kept
+                continue
+            scores = np.where(ok, kl[i], -np.inf)
+            parents = kp[i, int(np.argmax(scores))]
+            adj[parents[parents >= 0], i] = 1
+        return adj
+    table = np.asarray(st.table)                # dense oracle path
+    pst = np.asarray(st.pst)                    # (S, s) candidate ids, -1 pad
+    for i in range(n):
+        pn = pst + (pst >= i)                   # candidate -> node ids
+        real = pst >= 0
+        ok = np.where(real, pos[np.clip(pn, 0, n - 1)] < pos[i], True).all(1)
+        k = int(np.argmax(np.where(ok, table[i], -np.inf)))
+        adj[pn[k][real[k]], i] = 1
+    return adj
+
+
+def consensus_graph(edge_probs: np.ndarray, threshold: float = 0.5
+                    ) -> np.ndarray:
+    """Thresholded posterior adjacency: edge (p, c) is present iff its
+    posterior probability (from :func:`edge_posterior`) is >= ``threshold``.
+
+    Unlike the MAP DAG this summary is PER-EDGE, so it may contain cycles —
+    it answers "which edges does the posterior believe in", not "which
+    single DAG". Returns (n, n) int8; self-loops are dropped like every
+    other metric here. threshold must lie in (0, 1]: at 0 every edge would
+    be 'present' (vacuous), above 1 none could be.
+    """
+    p = np.asarray(edge_probs, np.float64)
+    if p.ndim != 2 or p.shape[0] != p.shape[1]:
+        raise ValueError(f"edge_probs must be square (n, n), got {p.shape}")
+    if np.any(p < 0) or np.any(p > 1):
+        raise ValueError("edge_probs outside [0, 1] — pass the output of "
+                         "edge_posterior, not raw counts")
+    if not 0.0 < threshold <= 1.0:
+        raise ValueError(f"threshold must lie in (0, 1], got {threshold}")
+    adj = (p >= threshold).astype(np.int8)
+    np.fill_diagonal(adj, 0)
+    return adj

@@ -70,6 +70,7 @@ import numpy as np
 
 from ..core import (adjacency_from_ranks, build_score_table, mcmc_run,
                     random_cpts, roc_point)
+from ..core.metrics import consensus_graph, edge_posterior, map_dag
 from ..core.combinatorics import n_parent_sets
 from ..core.mcmc import (BitmaskDelta, ChainState, exchange_best, init_chain,
                          make_traced_segment_runner, mcmc_run_adaptive,
@@ -92,7 +93,8 @@ from ..runtime.supervisor import (N_STATE_LEAVES, RunSupervisor, pack_tree,
                                   unpack_tree)
 
 __all__ = ["LearnConfig", "learn_structure", "make_score_fn",
-           "make_delta_fn", "adaptive_window_set", "reconcile_mask_planes",
+           "make_delta_fn", "make_engine_closures", "prepare_run",
+           "adaptive_window_set", "reconcile_mask_planes",
            "main", "AUTO_PRUNE_S", "AUTO_PRUNE_DELTA"]
 
 # Above this many parent sets per node, the fused path defaults to the
@@ -151,6 +153,13 @@ class LearnConfig:
                                   # max(64, 16 * trace_every); checkpointed
                                   # runs check at checkpoint boundaries)
     stop_on_converge: bool = False  # R̂ early stopping (implies telemetry)
+    emit_consensus: bool = False  # materialize posterior artifacts in the
+                                  # result dict — edge-probability matrix,
+                                  # MAP DAG, thresholded consensus graph —
+                                  # from the telemetry edge accumulator
+                                  # (implies telemetry; the same artifacts
+                                  # the service query layer serves)
+    consensus_threshold: float = 0.5  # edge-posterior cut for the consensus
     rhat_threshold: float = 1.05  # both R̂s must drop below this ...
     patience: int = 3             # ... for this many consecutive checks
     trace_dir: str = "experiments/runs"  # JSONL trace directory
@@ -382,7 +391,8 @@ def _run_sharded(st, cfg: LearnConfig, key, n: int, collector=None):
     early. The host loop (verified restore, chaos injection, chain healing)
     is the shared RunSupervisor — the sharded engine gets the same fault
     tolerance as the single-device ones.
-    Returns (states, delta_window, mask_on, iters_run, stopped, heals)."""
+    Returns (states, delta_window, mask_on, iters_run, stopped, heals,
+    trace)."""
     from ..core.sharded_scoring import (_shard_block, make_sharded_planes_fn,
                                         pad_table, score_order_sharded,
                                         sharded_chain_step)
@@ -453,21 +463,22 @@ def _run_sharded(st, cfg: LearnConfig, key, n: int, collector=None):
         res = sup.run(run_segment, states, trace)
         states = res.states
         jax.block_until_ready(states.best_score)
-    return states, w, mask_on, res.iters_run, res.stopped, res.heals
+    return (states, w, mask_on, res.iters_run, res.stopped, res.heals,
+            res.trace)
 
 
-def _run_segmented(st, cfg: LearnConfig, key, n: int, score_fn, window,
-                   delta_fn, planes_fn, adaptive_ws, delta_fns, burn_in,
-                   collector):
-    """Unified segmented driver for the single-device engines: used whenever
-    the run is checkpointed, telemetry is on, or the run is supervised (the
-    reasons the host must see the walk at sub-run granularity). One jitted
-    segment runner carries (ChainState, TraceState) through the scan; the
-    host loop between segments — verified restore, checkpoint snapshots,
-    collector checks / early stop, chaos injection and chain healing — is
-    the shared RunSupervisor (runtime/supervisor.py).
+def _build_segmented(st, cfg: LearnConfig, key, n: int, score_fn, window,
+                     delta_fn, planes_fn, adaptive_ws, delta_fns, burn_in,
+                     collector):
+    """Construct (but do not drive) the segmented single-device engine:
+    vmapped chain init, the jitted traced segment runner, and the armed
+    RunSupervisor. Shared by :func:`_run_segmented` (one-shot CLI) and the
+    posterior service's job manager (service/jobs.py) — both drive the SAME
+    supervisor object, so a service job interleaved with other jobs walks
+    through bitwise-identical segment boundaries to a standalone run.
 
-    Returns (stacked states, iters_run, stopped_early, heals)."""
+    Returns the RunSupervisor, armed via ``begin`` (drive with ``advance``
+    until ``finished``, then read ``result()``)."""
     telem = collector is not None
     checkpointed = bool(cfg.checkpoint_every and cfg.checkpoint_dir)
     C = cfg.chains
@@ -498,13 +509,34 @@ def _run_segmented(st, cfg: LearnConfig, key, n: int, score_fn, window,
     sup = _make_supervisor(
         cfg, seg, collector,
         (jax.vmap(planes_fn) if planes_fn is not None else None))
-    res = sup.run(run_segment, states, trace)
-    return res.states, res.iters_run, res.stopped, res.heals
+    return sup.begin(run_segment, states, trace)
+
+
+def _run_segmented(st, cfg: LearnConfig, key, n: int, score_fn, window,
+                   delta_fn, planes_fn, adaptive_ws, delta_fns, burn_in,
+                   collector):
+    """Unified segmented driver for the single-device engines: used whenever
+    the run is checkpointed, telemetry is on, or the run is supervised (the
+    reasons the host must see the walk at sub-run granularity). One jitted
+    segment runner carries (ChainState, TraceState) through the scan; the
+    host loop between segments — verified restore, checkpoint snapshots,
+    collector checks / early stop, chaos injection and chain healing — is
+    the shared RunSupervisor (runtime/supervisor.py).
+
+    Returns (stacked states, iters_run, stopped_early, heals, trace)."""
+    sup = _build_segmented(st, cfg, key, n, score_fn, window, delta_fn,
+                           planes_fn, adaptive_ws, delta_fns, burn_in,
+                           collector)
+    while sup.advance():
+        pass
+    res = sup.result()
+    return res.states, res.iters_run, res.stopped, res.heals, res.trace
 
 
 def _finish(cfg: LearnConfig, st, states, best_score, best_idx, *, window,
             adaptive_ws, mask_on, sharded, t_pre, cache_hit, auto_pruned,
-            t_iter, iters_run, stopped, collector, heals=()) -> dict:
+            t_iter, iters_run, stopped, collector, heals=(), trace=None,
+            best_pos=None) -> dict:
     """Common run epilogue: adjacency decode, per-chain statistics, the
     result dict, and — with telemetry on — the final trace row. ``states``
     may be a single un-stacked ChainState (chains == 1 fast paths) or the
@@ -543,6 +575,18 @@ def _finish(cfg: LearnConfig, st, states, best_score, best_idx, *, window,
         "heals": list(heals),         # supervisor chain-healing events
         "telemetry": None,
     }
+    if cfg.emit_consensus and trace is not None:
+        # the service query layer's posterior artifacts, materialized here
+        # for parity: standalone --emit-consensus answers must be bitwise
+        # equal to what bn_serve returns for the same (data, config, seed)
+        from ..telemetry import drain
+        snap = drain(trace)
+        probs = edge_posterior(snap["edge_counts"], snap["edge_taps"])
+        out["edge_posterior"] = probs
+        out["edge_samples"] = int(snap["edge_taps"])
+        out["consensus"] = consensus_graph(probs, cfg.consensus_threshold)
+        out["map_dag"] = (map_dag(st, np.asarray(best_pos))
+                          if best_pos is not None else adj)
     if collector is not None:
         collector.finalize(iters_run=iters_run, stopped_early=stopped,
                            best_score=float(best_score))
@@ -557,13 +601,45 @@ def _finish(cfg: LearnConfig, st, states, best_score, best_idx, *, window,
     return out
 
 
-def learn_structure(data: np.ndarray, cfg: LearnConfig, *,
-                    prior_matrix: np.ndarray | None = None) -> dict:
-    """Full pipeline. Returns {adjacency, score, preprocess_s, iteration_s,
-    per_iteration_s, accept_rate, chain_accept_rates, window_hist,
-    exchange_count, iters_run, stopped_early, telemetry, ...}."""
+def make_engine_closures(st, cfg: LearnConfig, n: int):
+    """Every closure the single-device engines need, shared by
+    :func:`learn_structure` and the service job manager: (score_fn, window,
+    delta_fn, planes_fn, adaptive_ws, delta_fns, burn_in, mask_on)."""
+    score_fn = make_score_fn(st, cfg)
+    checkpointed = bool(cfg.checkpoint_every and cfg.checkpoint_dir)
+    adaptive_ws: tuple[int, ...] = ()
+    delta_fns: tuple = ()
+    burn_in = 0
+    if cfg.adapt_window:
+        if checkpointed:
+            raise ValueError("--adapt-window does not compose with "
+                             "checkpointing yet: the dual-averaging state "
+                             "would restart each segment, breaking the "
+                             "burn-in freeze contract")
+        adaptive_ws = adaptive_window_set(n)
+        ctx = _delta_context(st, cfg)        # shared: pads/planes built ONCE
+        delta_fns = tuple(_delta_for_window(ctx, w) for w in adaptive_ws)
+        window, delta_fn, planes_fn = 0, None, ctx[3]
+        burn_in = cfg.burn_in or cfg.iters // 5
+    else:
+        window, delta_fn, planes_fn = make_delta_fn(st, cfg)
+    mask_on = isinstance(delta_fn, BitmaskDelta) or \
+        (cfg.adapt_window and planes_fn is not None)
+    return (score_fn, window, delta_fn, planes_fn, adaptive_ws, delta_fns,
+            burn_in, mask_on)
+
+
+def prepare_run(data: np.ndarray, cfg: LearnConfig, *,
+                prior_matrix: np.ndarray | None = None):
+    """The preprocess + telemetry half of the pipeline, shared by
+    :func:`learn_structure` and the posterior service's job manager
+    (service/jobs.py): builds the score table (reference or fused pipeline,
+    auto-prune switch, disk cache) and the telemetry collector.
+
+    Returns (st, collector, pre) with pre = {"t_pre", "cache_hit",
+    "auto_pruned"}."""
     n = data.shape[1]
-    telem = cfg.telemetry or cfg.stop_on_converge
+    telem = cfg.telemetry or cfg.stop_on_converge or cfg.emit_consensus
     collector = None
     if telem:
         from ..telemetry import Collector
@@ -601,86 +677,82 @@ def learn_structure(data: np.ndarray, cfg: LearnConfig, *,
                   if cfg.preprocess == "fused" else {})
         collector.stage("preprocess", t_pre, cache_hit=cache_hit,
                         auto_pruned=auto_pruned, **stages)
+    return st, collector, {"t_pre": t_pre, "cache_hit": cache_hit,
+                           "auto_pruned": auto_pruned}
+
+
+def learn_structure(data: np.ndarray, cfg: LearnConfig, *,
+                    prior_matrix: np.ndarray | None = None) -> dict:
+    """Full pipeline. Returns {adjacency, score, preprocess_s, iteration_s,
+    per_iteration_s, accept_rate, chain_accept_rates, window_hist,
+    exchange_count, iters_run, stopped_early, telemetry, ...}."""
+    n = data.shape[1]
+    telem = cfg.telemetry or cfg.stop_on_converge or cfg.emit_consensus
+    st, collector, pre = prepare_run(data, cfg, prior_matrix=prior_matrix)
+    t_pre, cache_hit = pre["t_pre"], pre["cache_hit"]
+    auto_pruned = pre["auto_pruned"]
 
     key = jax.random.key(cfg.seed)
 
     if cfg.sharded:
         t0 = time.time()
-        states, window, mask_on, iters_run, stopped, heals = _run_sharded(
-            st, cfg, key, n, collector)
+        (states, window, mask_on, iters_run, stopped, heals,
+         trace) = _run_sharded(st, cfg, key, n, collector)
         t_iter = time.time() - t0
-        best_score, best_idx, _ = exchange_best(states)
+        best_score, best_idx, best_pos = exchange_best(states)
         return _finish(cfg, st, states, best_score, best_idx, window=window,
                        adaptive_ws=(), mask_on=mask_on, sharded=True,
                        t_pre=t_pre, cache_hit=cache_hit,
                        auto_pruned=auto_pruned, t_iter=t_iter,
                        iters_run=iters_run, stopped=stopped,
-                       collector=collector, heals=heals)
+                       collector=collector, heals=heals, trace=trace,
+                       best_pos=best_pos)
 
-    score_fn = make_score_fn(st, cfg)
+    (score_fn, window, delta_fn, planes_fn, adaptive_ws, delta_fns,
+     burn_in, mask_on) = make_engine_closures(st, cfg, n)
 
     checkpointed = bool(cfg.checkpoint_every and cfg.checkpoint_dir)
-    adaptive_ws: tuple[int, ...] = ()
-    delta_fns: tuple = ()
-    burn_in = 0
-    if cfg.adapt_window:
-        if checkpointed:
-            raise ValueError("--adapt-window does not compose with "
-                             "checkpointing yet: the dual-averaging state "
-                             "would restart each segment, breaking the "
-                             "burn-in freeze contract")
-        adaptive_ws = adaptive_window_set(n)
-        ctx = _delta_context(st, cfg)        # shared: pads/planes built ONCE
-        delta_fns = tuple(_delta_for_window(ctx, w) for w in adaptive_ws)
-        window, delta_fn, planes_fn = 0, None, ctx[3]
-        burn_in = cfg.burn_in or cfg.iters // 5
-    else:
-        window, delta_fn, planes_fn = make_delta_fn(st, cfg)
-    mask_on = isinstance(delta_fn, BitmaskDelta) or \
-        (cfg.adapt_window and planes_fn is not None)
-
     supervised = cfg.supervise or bool(cfg.fault_plan)
     iters_run, stopped = cfg.iters, False
     heals: list = []
+    trace = None
     t0 = time.time()
     if not checkpointed and not telem and not supervised:
         # fast paths: the whole walk is ONE jitted program, no segmentation
         if cfg.adapt_window:
             if cfg.chains == 1:
-                state, _ = mcmc_run_adaptive(
+                states, _ = mcmc_run_adaptive(
                     key, n, score_fn, cfg.iters, windows=adaptive_ws,
                     delta_fns=delta_fns, planes_fn=planes_fn,
                     burn_in=burn_in)
-                states = state
-                best_score, best_idx = state.best_score, state.best_idx
             else:
                 states = mcmc_run_chains_adaptive(
                     key, cfg.chains, n, score_fn, cfg.iters,
                     windows=adaptive_ws, delta_fns=delta_fns,
                     planes_fn=planes_fn, burn_in=burn_in,
                     exchange_every=cfg.exchange_every)
-                best_score, best_idx, _ = exchange_best(states)
         elif cfg.chains == 1:
-            state, _ = mcmc_run(key, n, score_fn, cfg.iters,
-                                delta_fn=delta_fn, window=window,
-                                planes_fn=planes_fn)
-            states = state
-            best_score, best_idx = state.best_score, state.best_idx
+            states, _ = mcmc_run(key, n, score_fn, cfg.iters,
+                                 delta_fn=delta_fn, window=window,
+                                 planes_fn=planes_fn)
         else:
             states = mcmc_run_chains(key, cfg.chains, n, score_fn, cfg.iters,
                                      delta_fn=delta_fn, window=window,
                                      exchange_every=cfg.exchange_every,
                                      planes_fn=planes_fn)
-            best_score, best_idx, _ = exchange_best(states)
     else:
         # segmented path: checkpointing, telemetry and/or supervision need
         # the host between scan segments (snapshots, collector checks,
         # early stop, chaos injection, chain healing)
-        states, iters_run, stopped, heals = _run_segmented(
+        states, iters_run, stopped, heals, trace = _run_segmented(
             st, cfg, key, n, score_fn, window, delta_fn,
             planes_fn, adaptive_ws, delta_fns, burn_in, collector)
-        best_score, best_idx, _ = exchange_best(states)
-    jax.block_until_ready(best_score)
+    jax.block_until_ready(states.best_score)
+    if np.asarray(states.best_score).ndim:
+        best_score, best_idx, best_pos = exchange_best(states)
+    else:
+        best_score, best_idx = states.best_score, states.best_idx
+        best_pos = states.best_pos
     t_iter = time.time() - t0
 
     # rank-decoded adjacency (Algorithm 2 in reverse): identical to the old
@@ -689,7 +761,8 @@ def learn_structure(data: np.ndarray, cfg: LearnConfig, *,
                    adaptive_ws=adaptive_ws, mask_on=mask_on, sharded=False,
                    t_pre=t_pre, cache_hit=cache_hit, auto_pruned=auto_pruned,
                    t_iter=t_iter, iters_run=iters_run, stopped=stopped,
-                   collector=collector, heals=heals)
+                   collector=collector, heals=heals, trace=trace,
+                   best_pos=best_pos)
 
 
 def _network_data(name: str, m: int, q: int, seed: int, n_synth: int = 64):
@@ -776,6 +849,16 @@ def main(argv=None) -> dict:
                          "checks (implies --telemetry)")
     ap.add_argument("--rhat-threshold", type=float, default=1.05)
     ap.add_argument("--patience", type=int, default=3)
+    ap.add_argument("--emit-consensus", action="store_true",
+                    help="materialize the service query layer's posterior "
+                         "artifacts in the result: edge-probability matrix "
+                         "(core/metrics.edge_posterior over the telemetry "
+                         "edge accumulator), MAP DAG under the best order, "
+                         "and the thresholded consensus graph (implies "
+                         "--telemetry)")
+    ap.add_argument("--consensus-threshold", type=float, default=0.5,
+                    help="edge-posterior probability cut for the consensus "
+                         "graph (in (0, 1])")
     ap.add_argument("--trace-dir", default="experiments/runs",
                     help="JSONL trace directory for --telemetry")
     ap.add_argument("--run-name", default="",
@@ -832,6 +915,8 @@ def main(argv=None) -> dict:
                       stop_on_converge=args.stop_on_converge,
                       rhat_threshold=args.rhat_threshold,
                       patience=args.patience,
+                      emit_consensus=args.emit_consensus,
+                      consensus_threshold=args.consensus_threshold,
                       trace_dir=args.trace_dir,
                       run_name=args.run_name,
                       supervise=args.supervise,
@@ -877,6 +962,10 @@ def main(argv=None) -> dict:
         events = " ".join(f"{h['chain']}<-{h['donor']}@{h['iter']}"
                           f"({h['reason']})" for h in out["heals"])
         summary += f" heals=[{events}]"
+    if "consensus" in out:
+        summary += (f" | consensus: {int(out['consensus'].sum())} edges "
+                    f"@ p>={args.consensus_threshold:g}, "
+                    f"MAP: {int(out['map_dag'].sum())} edges")
     tele = out.get("telemetry")
     if tele is not None:
         summary += (f" | R̂(score)={tele['score_rhat']:.3f} "

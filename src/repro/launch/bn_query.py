@@ -1,0 +1,113 @@
+"""bn_query: offline reader for persisted posterior-service artifacts.
+
+    PYTHONPATH=src python -m repro.launch.bn_query --run-dir \
+        experiments/service [--job job-<hash>] [--kind posterior|map|consensus]
+        [--threshold 0.7] [--json]
+
+The server (``bn_serve``) persists every finished job's validated artifact
+responses to ``<run_dir>/jobs/<job_id>/result.json`` — so answers stay
+queryable after the server stops, from cron jobs, or over plain files on a
+shared filesystem. With no ``--job`` the CLI lists every persisted job with
+its stamp (iterations, R̂ status, heals). ``--threshold`` recomputes the
+consensus adjacency from the persisted posterior matrix — the same pure
+derivation the live endpoint uses.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+
+from ..service import validate_response
+from ..service.schema import SCHEMA
+
+__all__ = ["load_result", "list_jobs", "main"]
+
+
+def list_jobs(run_dir: str) -> list[str]:
+    jobs_dir = os.path.join(run_dir, "jobs")
+    if not os.path.isdir(jobs_dir):
+        return []
+    return sorted(j for j in os.listdir(jobs_dir)
+                  if os.path.isfile(os.path.join(jobs_dir, j,
+                                                 "result.json")))
+
+
+def load_result(run_dir: str, job_id: str) -> dict:
+    path = os.path.join(run_dir, "jobs", job_id, "result.json")
+    with open(path) as f:
+        doc = json.load(f)
+    for key in ("job", "posterior", "map", "consensus"):
+        if key not in doc:
+            raise ValueError(f"{path}: missing {key!r} section — not a "
+                             f"{SCHEMA} result document")
+        validate_response(doc[key])
+    return doc
+
+
+def _fmt_stamp(resp: dict) -> str:
+    return (f"iters {resp['iters_done']}/{resp['iters']} "
+            f"converged={resp['converged']} "
+            f"rhat={resp['score_rhat']:.4f}/{resp['edge_rhat']:.4f} "
+            f"heals={resp['heals']}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--run-dir", default="experiments/service")
+    ap.add_argument("--job", default="",
+                    help="job id; omit to list persisted jobs")
+    ap.add_argument("--kind", default="posterior",
+                    choices=["posterior", "map", "consensus", "job"])
+    ap.add_argument("--threshold", type=float, default=None,
+                    help="recompute consensus at this probability")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="print the raw response document")
+    args = ap.parse_args(argv)
+
+    if not args.job:
+        jobs = list_jobs(args.run_dir)
+        if not jobs:
+            print(f"no persisted jobs under {args.run_dir}/jobs")
+            return 1
+        for jid in jobs:
+            doc = load_result(args.run_dir, jid)
+            print(f"{jid}  state={doc['job']['state']}  "
+                  f"n={doc['job']['n']}  {_fmt_stamp(doc['job'])}")
+        return 0
+
+    doc = load_result(args.run_dir, args.job)
+    resp = doc[args.kind]
+    if args.kind == "consensus" and args.threshold is not None:
+        from ..core.metrics import consensus_graph
+        probs = np.asarray(doc["posterior"]["edge_probs"])
+        adj = consensus_graph(probs, args.threshold)
+        resp = {**resp, "threshold": float(args.threshold),
+                "adjacency": adj.astype(int).tolist()}
+        validate_response(resp)
+    if args.as_json:
+        json.dump(resp, sys.stdout, indent=2)
+        print()
+        return 0
+    print(f"{args.job} [{args.kind}]  {_fmt_stamp(resp)}")
+    if args.kind == "posterior":
+        probs = np.asarray(resp["edge_probs"])
+        print(f"edge_samples={resp['edge_samples']}  "
+              f"max_p={probs.max():.3f}  "
+              f"edges@0.5={int((probs >= 0.5).sum())}")
+        with np.printoptions(precision=3, suppress=True, linewidth=120):
+            print(probs)
+    elif args.kind in ("map", "consensus"):
+        adj = np.asarray(resp["adjacency"])
+        extra = (f"score={resp['score']:.4f}" if args.kind == "map" else
+                 f"threshold={resp['threshold']}")
+        print(f"edges={int(adj.sum())}  {extra}")
+        print(adj)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

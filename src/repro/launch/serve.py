@@ -1,4 +1,11 @@
-"""Batched serving driver: prefill + greedy decode loop with a KV cache.
+"""Batched LM serving driver: prefill + greedy decode loop with a KV cache.
+
+This module serves the LANGUAGE-MODEL side of the repo only (the sequence
+architectures under ``repro.models``). It does NOT serve Bayesian-network
+structure learning — for the long-running BN posterior service (job
+admission, multi-dataset fleet scheduling, posterior/MAP/consensus queries
+over HTTP) use ``repro.launch.bn_serve``; for offline artifact queries use
+``repro.launch.bn_query``.
 
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-7b --reduced \
         --batch 4 --prompt-len 32 --gen 16

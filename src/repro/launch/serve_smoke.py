@@ -1,0 +1,154 @@
+"""serve_smoke: end-to-end CI gate for the bn_serve posterior service.
+
+    PYTHONPATH=src python -m repro.launch.serve_smoke
+
+Starts the HTTP server IN-PROCESS on an ephemeral port, then exercises the
+whole service contract over real HTTP:
+
+1. submits two small synthetic datasets, one of them twice — the duplicate
+   must come back with the SAME job id and ``deduped: true``;
+2. polls job status to completion (per-job stop-on-converge may retire a
+   job early; its slots must be reclaimed);
+3. fetches posterior / MAP / consensus artifacts and validates every
+   response against the ``bn-service/v1`` schema;
+4. asserts each job's artifacts are BITWISE-equal to a standalone
+   ``learn_structure`` run of the same (data, config, seed) — the service's
+   core determinism promise (JSON float64 round-trips exactly, so the
+   HTTP hop cannot blur the comparison);
+5. checks the offline ``bn_query`` CLI reads the persisted artifacts back;
+6. shuts the server down cleanly via POST /v1/shutdown.
+
+Exit code 0 = every gate passed. Runs on CPU in well under a minute.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import tempfile
+import threading
+import time
+import urllib.request
+
+import numpy as np
+
+__all__ = ["main"]
+
+_POLL_TIMEOUT = 300.0      # seconds until we declare the service hung
+
+
+def _http(method: str, url: str, payload: dict | None = None) -> dict:
+    data = None if payload is None else json.dumps(payload).encode()
+    req = urllib.request.Request(url, data=data, method=method,
+                                 headers={"Content-Type":
+                                          "application/json"})
+    with urllib.request.urlopen(req, timeout=60) as resp:
+        return json.loads(resp.read())
+
+
+def main(argv=None) -> int:
+    from ..launch.bn_learn import learn_structure
+    from ..launch.bn_query import load_result
+    from ..launch.bn_serve import BNServer
+    from ..service import load_dataset, service_config, validate_response
+    from ..service.jobs import DatasetSpec
+
+    run_dir = tempfile.mkdtemp(prefix="serve_smoke_")
+    srv = BNServer(("127.0.0.1", 0), slots=16, run_dir=run_dir)
+    host, port = srv.server_address[:2]
+    base = f"http://{host}:{port}"
+    t = threading.Thread(target=srv.serve_forever, daemon=True)
+    t.start()
+    print(f"serve_smoke: server up at {base}, run_dir={run_dir}")
+
+    config = {"iters": 400, "chains": 3, "check_every": 100,
+              "trace_every": 10, "seed": 11, "stop_on_converge": True,
+              "patience": 1}
+    specs = [
+        {"network": "synth", "n": 8, "m": 150, "seed": 3},
+        {"network": "synth", "n": 10, "m": 150, "seed": 4},
+    ]
+
+    health = _http("GET", f"{base}/v1/health")
+    validate_response(health)
+    assert health["state"] == "up", health
+
+    # --- submit both datasets, plus an exact duplicate of the first
+    jobs = [_http("POST", f"{base}/v1/jobs",
+                  {"dataset": s, "config": config}) for s in specs]
+    dup = _http("POST", f"{base}/v1/jobs",
+                {"dataset": specs[0], "config": config})
+    for j in jobs + [dup]:
+        validate_response(j)
+    assert not jobs[0]["deduped"] and not jobs[1]["deduped"], jobs
+    assert dup["deduped"] and dup["job_id"] == jobs[0]["job_id"], \
+        f"dedup broken: {dup['job_id']} vs {jobs[0]['job_id']}"
+    assert dup["attached"] == 2, dup
+    assert jobs[0]["job_id"] != jobs[1]["job_id"]
+    print(f"serve_smoke: dedup OK ({dup['job_id']} attached twice)")
+
+    # --- poll to completion
+    ids = [j["job_id"] for j in jobs]
+    deadline = time.time() + _POLL_TIMEOUT
+    states: dict[str, dict] = {}
+    while time.time() < deadline:
+        states = {i: _http("GET", f"{base}/v1/jobs/{i}") for i in ids}
+        if all(s["state"] in ("done", "failed") for s in states.values()):
+            break
+        time.sleep(0.5)
+    for i, s in states.items():
+        validate_response(s)
+        assert s["state"] == "done", f"job {i}: {s}"
+    print("serve_smoke: both jobs done "
+          f"(iters_done={[states[i]['iters_done'] for i in ids]}, "
+          f"converged={[states[i]['converged'] for i in ids]})")
+
+    # --- slots reclaimed once everything finished
+    health = _http("GET", f"{base}/v1/health")
+    assert health["slots_used"] == 0 and health["active"] == 0, health
+
+    # --- artifacts: schema-valid AND bitwise-equal to standalone runs
+    for spec, jid in zip(specs, ids):
+        post = _http("GET", f"{base}/v1/jobs/{jid}/posterior")
+        mapr = _http("GET", f"{base}/v1/jobs/{jid}/map")
+        cons = _http("GET", f"{base}/v1/jobs/{jid}/consensus")
+        cons_lo = _http("GET",
+                        f"{base}/v1/jobs/{jid}/consensus?threshold=0.25")
+        for r in (post, mapr, cons, cons_lo):
+            validate_response(r)
+        assert cons_lo["threshold"] == 0.25
+        assert np.asarray(cons_lo["adjacency"]).sum() >= \
+            np.asarray(cons["adjacency"]).sum()
+
+        cfg = service_config(config)
+        data = load_dataset(DatasetSpec(**spec), cfg.q)
+        ref = learn_structure(data, cfg)
+        same = {
+            "posterior": np.array_equal(np.asarray(post["edge_probs"]),
+                                        np.asarray(ref["edge_posterior"])),
+            "map": np.array_equal(np.asarray(mapr["adjacency"]),
+                                  np.asarray(ref["map_dag"])),
+            "consensus": np.array_equal(np.asarray(cons["adjacency"]),
+                                        np.asarray(ref["consensus"])),
+            "score": mapr["score"] == float(ref["score"]),
+        }
+        assert all(same.values()), f"job {jid} diverged: {same}"
+        print(f"serve_smoke: {jid} bitwise-equal to standalone "
+              f"(n={post['n']}, edge_samples={post['edge_samples']})")
+
+    # --- offline CLI reads the persisted artifacts back
+    for jid in ids:
+        doc = load_result(run_dir, jid)
+        assert doc["job"]["state"] == "done"
+    print("serve_smoke: bn_query round-trip OK")
+
+    # --- clean shutdown
+    bye = _http("POST", f"{base}/v1/shutdown")
+    validate_response(bye)
+    t.join(timeout=60)
+    assert not t.is_alive(), "server thread did not stop"
+    print("serve_smoke: clean shutdown — PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -175,6 +175,12 @@ class RunSupervisor:
         self._stalled: dict[int, object] = {}
         self._seg_done = 0
         self.heals: list[dict] = []
+        # incremental-drive carry (armed by begin(), advanced by advance())
+        self._run_segment = None
+        self._states = self._trace = None
+        self._done = 0
+        self._stopped = False
+        self._resumed_from: int | None = None
 
     # ------------------------------------------------------------ metadata
     def _state_meta(self) -> dict:
@@ -310,42 +316,114 @@ class RunSupervisor:
         return states, trace
 
     # ----------------------------------------------------------------- run
+    def begin(self, run_segment, states, trace) -> "RunSupervisor":
+        """Arm the supervisor for incremental driving: verified auto-resume,
+        then park the (states, trace) carry until :meth:`advance` is called.
+
+        ``begin``/``advance``/``result`` split :meth:`run` into steps so a
+        MULTI-JOB host loop (service/scheduler.py) can interleave segments
+        of several supervised runs round-robin on one device budget; one
+        call to :meth:`advance` is exactly one trip through the old while
+        body, so ``run()`` — begin + advance-until-finished + result —
+        is behaviourally unchanged."""
+        self._run_segment = run_segment
+        states, trace, done, resumed_from = self._restore(states, trace)
+        self._states, self._trace = states, trace
+        self._done, self._resumed_from = done, resumed_from
+        self._stopped = False
+        return self
+
+    @property
+    def finished(self) -> bool:
+        """True once the budget is exhausted or stop-on-converge fired."""
+        return self._done >= self.iters or self._stopped
+
+    @property
+    def states(self):
+        """Current chain stack (valid between begin() and result())."""
+        return self._states
+
+    @states.setter
+    def states(self, value):
+        self._states = value
+
+    @property
+    def trace(self):
+        """Current TraceState | None (valid between begin() and result())."""
+        return self._trace
+
+    @trace.setter
+    def trace(self, value):
+        self._trace = value
+
+    @property
+    def iters_done(self) -> int:
+        return self._done
+
+    def advance(self) -> bool:
+        """Run ONE supervised segment (chaos injection, segment scan, stall
+        replay, collector check, healing, checkpoint). Returns True while
+        the run has more segments to go."""
+        if self.finished:
+            return False
+        states, trace, done = self._states, self._trace, self._done
+        if self.faults:
+            states = self._fire_pre_segment(states)
+        length = min(self.seg, self.iters - done)
+        states, trace = self._run_segment(states, trace, jnp.int32(done),
+                                          length=length)
+        done += length
+        if self._stalled:
+            states = self._replay_stalls(states)
+        rec = None
+        if self.collector is not None:
+            from ..telemetry import drain
+            rec = self.collector.check(drain(trace), done)
+        if self.heal:
+            states, trace = self._heal(states, trace, rec, done)
+        crash_before, corrupts, crash_after = (
+            self.faults.checkpoint_events(self._seg_done)
+            if self.faults else (False, [], False))
+        if crash_before:
+            self.faults.crash(f"before checkpoint write at iter {done}")
+        if self.checkpointed:
+            save_checkpoint(self.checkpoint_dir, done,
+                            pack_tree(self.pack, states, trace),
+                            metadata=self._state_meta())
+        for event in corrupts:
+            self.faults.corrupt_checkpoint(self.checkpoint_dir, event)
+        if crash_after:
+            self.faults.crash(f"after checkpoint write at iter {done}")
+        self._seg_done += 1
+        self._states, self._trace, self._done = states, trace, done
+        if self.stop_on_converge and rec is not None and rec["converged"]:
+            self._stopped = True
+        return not self.finished
+
+    def result(self) -> SupervisedResult:
+        return SupervisedResult(states=self._states, trace=self._trace,
+                                iters_run=self._done, stopped=self._stopped,
+                                resumed_from=self._resumed_from,
+                                heals=self.heals)
+
+    def grow(self, extra: int) -> None:
+        """Widen the per-chain host bookkeeping after an elastic fleet
+        expansion (service/scheduler.expand_fleet): new slots start with a
+        clean miss/progress history. The jitted segment runner recompiles
+        for the new chain count on its own."""
+        if extra <= 0:
+            return
+        self.chains += int(extra)
+        self._missed = np.concatenate(
+            [self._missed, np.zeros(extra, np.int64)])
+        if self._prev_step is not None:
+            self._prev_step = np.concatenate(
+                [self._prev_step, np.full(extra, -1, np.int64)])
+
     def run(self, run_segment, states, trace) -> SupervisedResult:
         """Drive ``run_segment(states, trace, start, length=...)`` to the
         iteration budget (or convergence), supervised."""
-        states, trace, done, resumed_from = self._restore(states, trace)
-        stopped = False
-        while done < self.iters and not stopped:
-            if self.faults:
-                states = self._fire_pre_segment(states)
-            length = min(self.seg, self.iters - done)
-            states, trace = run_segment(states, trace, jnp.int32(done),
-                                        length=length)
-            done += length
-            if self._stalled:
-                states = self._replay_stalls(states)
-            rec = None
-            if self.collector is not None:
-                from ..telemetry import drain
-                rec = self.collector.check(drain(trace), done)
-            if self.heal:
-                states, trace = self._heal(states, trace, rec, done)
-            crash_before, corrupts, crash_after = (
-                self.faults.checkpoint_events(self._seg_done)
-                if self.faults else (False, [], False))
-            if crash_before:
-                self.faults.crash(f"before checkpoint write at iter {done}")
-            if self.checkpointed:
-                save_checkpoint(self.checkpoint_dir, done,
-                                pack_tree(self.pack, states, trace),
-                                metadata=self._state_meta())
-            for event in corrupts:
-                self.faults.corrupt_checkpoint(self.checkpoint_dir, event)
-            if crash_after:
-                self.faults.crash(f"after checkpoint write at iter {done}")
-            self._seg_done += 1
-            if self.stop_on_converge and rec is not None and rec["converged"]:
-                stopped = True
-        return SupervisedResult(states=states, trace=trace, iters_run=done,
-                                stopped=stopped, resumed_from=resumed_from,
-                                heals=self.heals)
+        self.begin(run_segment, states, trace)
+        while self.advance():
+            pass
+        return self.result()

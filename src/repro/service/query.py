@@ -1,0 +1,125 @@
+"""Query layer: materialized posterior artifacts, stamped and validated.
+
+The service answers THREE structural queries per job (the query surface
+parallel bnlearn-style BN servers expose — PAPERS.md, arxiv 1406.7648):
+
+* **posterior** — the (n, n) edge-probability matrix from the telemetry
+  edge accumulator (``core/metrics.edge_posterior``): the full per-edge
+  marginal, the most reusable artifact (any threshold, any edge query,
+  ROC sweeps are all derived from it).
+* **map** — the single best DAG: the walk's best order decoded through the
+  per-node consistent parent-set argmax (``core/metrics.map_dag``).
+* **consensus** — the thresholded posterior adjacency
+  (``core/metrics.consensus_graph``): "which edges does the posterior
+  believe at probability ≥ t"; recomputed on the fly for ad-hoc
+  thresholds since it is a pure function of the posterior matrix.
+
+All three come from the job's ``_finish`` result dict — the SAME dict a
+standalone ``bn_learn --emit-consensus`` run returns — so service answers
+are bitwise-comparable to one-shot answers by construction (the CI smoke
+asserts exactly that). Every response carries the provenance stamp
+(schema.STAMP): job id, iterations, R̂ status + convergence vote, and the
+heal/reseed counts, so a client can judge an answer's trustworthiness
+without a second round trip.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.metrics import consensus_graph
+from .schema import SCHEMA, validate_response
+
+__all__ = ["stamp", "job_response", "posterior_response", "map_response",
+           "consensus_response", "materialize", "error_response"]
+
+
+def stamp(job) -> dict:
+    """The provenance fields every per-job response carries."""
+    res = job.result or {}
+    tele = res.get("telemetry") or {}
+    iters_done = (res.get("iters_run") if res else
+                  (job.sup.iters_done if job.sup is not None else 0))
+    return {
+        "schema": SCHEMA,
+        "job_id": job.id,
+        "iters": int(job.cfg.iters),
+        "iters_done": int(iters_done or 0),
+        "converged": bool(tele.get("converged", False)),
+        "score_rhat": float(tele.get("score_rhat", float("nan"))),
+        "edge_rhat": float(tele.get("edge_rhat", float("nan"))),
+        "heals": len(res.get("heals", [])),
+        "reseeds": [int(x) for x in tele.get("reseeds", [])],
+    }
+
+
+def job_response(job, *, deduped: bool | None = None) -> dict:
+    resp = {**stamp(job), "kind": "job", "state": job.state,
+            "deduped": bool(job.deduped if deduped is None else deduped),
+            "attached": int(job.attached), "n": job.n,
+            "chains": int(job.chains)}
+    if job.error:
+        resp["error"] = job.error
+    validate_response(resp)
+    return resp
+
+
+def _require_done(job) -> dict:
+    if job.state != "done" or job.result is None:
+        raise LookupError(f"job {job.id} is {job.state}: artifacts exist "
+                          "only once the job is done")
+    return job.result
+
+
+def posterior_response(job) -> dict:
+    res = _require_done(job)
+    tele = res.get("telemetry") or {}
+    probs = np.asarray(res["edge_posterior"])
+    resp = {**stamp(job), "kind": "posterior", "n": int(probs.shape[0]),
+            "edge_probs": probs.tolist(),
+            "edge_samples": int(tele.get("edge_samples",
+                                         res.get("edge_samples", 0)))}
+    validate_response(resp)
+    return resp
+
+
+def map_response(job) -> dict:
+    res = _require_done(job)
+    adj = np.asarray(res["map_dag"])
+    resp = {**stamp(job), "kind": "map", "n": int(adj.shape[0]),
+            "adjacency": adj.astype(int).tolist(),
+            "score": float(res["score"])}
+    validate_response(resp)
+    return resp
+
+
+def consensus_response(job, threshold: float | None = None) -> dict:
+    """Default threshold → the job's precomputed consensus artifact
+    (bitwise what the standalone run emitted); an explicit threshold is
+    recomputed from the posterior matrix — a pure derivation, so it stays
+    consistent with the posterior answer by construction."""
+    res = _require_done(job)
+    if threshold is None:
+        threshold = job.cfg.consensus_threshold
+        adj = np.asarray(res["consensus"])
+    else:
+        adj = consensus_graph(np.asarray(res["edge_posterior"]),
+                              float(threshold))
+    resp = {**stamp(job), "kind": "consensus", "n": int(adj.shape[0]),
+            "adjacency": adj.astype(int).tolist(),
+            "threshold": float(threshold)}
+    validate_response(resp)
+    return resp
+
+
+def materialize(job) -> dict:
+    """All three artifact responses at once (the persisted result.json the
+    offline ``bn_query`` CLI reads)."""
+    return {"posterior": posterior_response(job),
+            "map": map_response(job),
+            "consensus": consensus_response(job)}
+
+
+def error_response(message: str) -> dict:
+    resp = {"schema": SCHEMA, "kind": "error", "error": str(message)}
+    validate_response(resp)
+    return resp

@@ -1,0 +1,178 @@
+"""Fleet scheduler: many jobs, one device budget, round-robin segments.
+
+The engine already cuts every supervised run into jitted segments with the
+host in between (RunSupervisor.begin/advance). The scheduler exploits
+exactly that seam: each TICK admits whatever queued jobs fit the slot
+budget, then advances every active job by ONE segment, round-robin. A
+small-n segment is milliseconds of device time, so interleaving K jobs
+costs each of them only the other jobs' segment latency — no job-level
+head-of-line blocking, and per-job ``stop_on_converge`` retires finished
+jobs from the pack early, freeing their slots for queued work.
+
+Determinism: interleaving changes WHEN a job's segments run, never what
+they compute — each job owns its states/trace/PRNG streams and its
+supervisor, so a job's artifacts are bitwise-identical to running it alone
+(tests/test_service.py pins this). The one opt-in exception is ELASTIC
+cloning: when jobs finish and slots sit idle, ``expand_fleet`` widens a
+running job's fleet by cloning its best finite chain into fresh slots via
+``straggler.rebalance_chains`` (fresh PRNG keys, planes rebuilt, telemetry
+rows re-seeded from the donor — the same machinery chain healing uses).
+More chains sharpen the posterior and the cross-chain R̂, but the walk is
+no longer the standalone walk, so elasticity defaults OFF and is never
+applied to jobs that were admitted with it disabled.
+"""
+from __future__ import annotations
+
+import logging
+from collections import deque
+
+import numpy as np
+
+from ..runtime.straggler import (StragglerPolicy, best_finite_chain,
+                                 rebalance_chains)
+from ..runtime.supervisor import _reseed_trace
+
+__all__ = ["FleetScheduler", "expand_fleet"]
+
+logger = logging.getLogger(__name__)
+
+
+def expand_fleet(job, extra: int) -> int:
+    """Widen a running job's chain fleet by ``extra`` cloned slots.
+
+    The new slots are stacked copies of slot 0, immediately re-seeded as
+    clones of the BEST finite chain with fresh fold_in-derived keys by
+    ``rebalance_chains`` (patience-1 policy, only the new slots marked
+    unprogressed). Consistency planes are rebuilt for the cloned positions
+    under this engine's padding, the telemetry rows are re-seeded from the
+    donor, and the supervisor/collector bookkeeping grows to match. The
+    jitted segment runner recompiles once for the new chain count.
+
+    Returns the number of slots actually added (0 if the job isn't
+    running)."""
+    import jax
+    import jax.numpy as jnp
+
+    if extra <= 0 or job.sup is None or job.state != "running":
+        return 0
+    sup = job.sup
+    states, trace = sup.states, sup.trace
+    C = int(np.asarray(states.pos).shape[0])
+    donor = best_finite_chain(states.best_score)
+
+    def pad(leaf):
+        return jnp.concatenate([leaf, jnp.repeat(leaf[:1], extra, axis=0)])
+
+    raw = states._replace(key=jax.random.key_data(states.key))
+    padded = jax.tree.map(pad, raw)
+    states = padded._replace(key=jax.random.wrap_key_data(padded.key))
+    # clone best→new: only the fresh slots are unprogressed, so the
+    # patience-1 policy re-seeds exactly them (fresh keys, caches copied)
+    progressed = np.ones(C + extra, bool)
+    progressed[C:] = False
+    key = jax.random.fold_in(
+        jax.random.key(int(job.cfg.seed) ^ 0xE1A57C), sup.iters_done)
+    states, _, healed = rebalance_chains(
+        key, states, progressed, np.zeros(C + extra, np.int64),
+        StragglerPolicy(patience=1), return_mask=True)
+    if sup.planes_fn is not None:
+        states = states._replace(mask_planes=sup.planes_fn(states.pos))
+    else:
+        states = states._replace(
+            mask_planes=jnp.zeros((C + extra, 0), jnp.uint32))
+    if trace is not None:
+        per_chain = trace._replace(
+            scores=pad(trace.scores), accepts=pad(trace.accepts),
+            win_hist=pad(trace.win_hist),
+            edge_counts=pad(trace.edge_counts), reseeds=pad(trace.reseeds))
+        trace = _reseed_trace(per_chain, healed, donor)
+    sup.grow(extra)                       # miss/progress bookkeeping
+    if sup.collector is not None:
+        sup.collector.grow(extra)         # accept-rate diff baseline
+    sup.states, sup.trace = states, trace
+    job.extra_chains += extra
+    logger.info("elastic: job %s grew %d -> %d chains (donor %d)",
+                job.id, C, C + extra, donor)
+    return extra
+
+
+class FleetScheduler:
+    """Packs admitted jobs onto ``slots`` chain slots (see module
+    docstring). Drive with :meth:`step` per tick or :meth:`run` to
+    completion."""
+
+    def __init__(self, manager, *, slots: int = 64, elastic: bool = False,
+                 elastic_cap: int = 0):
+        self.manager = manager
+        self.slots = int(slots)
+        self.elastic = bool(elastic)
+        # per-job ceiling for elastic growth (0 = up to the slot budget)
+        self.elastic_cap = int(elastic_cap)
+        self.active: list = []
+        self.pending: deque = deque()
+
+    # ------------------------------------------------------------ admission
+    def submit(self, data, cfg, *, prior_matrix=None):
+        """Admit through the manager's dedup layer; genuinely new jobs
+        queue for slots. Returns (job, deduped)."""
+        job, deduped = self.manager.submit(data, cfg,
+                                           prior_matrix=prior_matrix)
+        if not deduped:
+            if job.chains > self.slots:
+                job.state = "failed"
+                job.error = (f"job needs {job.chains} chain slots, budget "
+                             f"is {self.slots}")
+            else:
+                self.pending.append(job)
+        return job, deduped
+
+    @property
+    def slots_used(self) -> int:
+        return sum(j.chains for j in self.active)
+
+    def _admit(self) -> None:
+        while self.pending and \
+                self.pending[0].chains + self.slots_used <= self.slots:
+            job = self.pending.popleft()
+            try:
+                job.start()
+            except Exception as exc:       # noqa: BLE001 — job isolation
+                job.state = "failed"
+                job.error = f"{type(exc).__name__}: {exc}"
+                continue
+            self.active.append(job)
+
+    # ----------------------------------------------------------------- tick
+    def step(self) -> bool:
+        """One scheduler tick: admit, advance every active job ONE segment
+        (round-robin), retire finished/failed jobs (their slots free
+        immediately), then optionally grow elastic jobs into idle slots.
+        Returns True while any job is active or pending."""
+        self._admit()
+        for job in list(self.active):
+            more = job.advance()
+            if job.state == "failed":
+                self.active.remove(job)
+                logger.warning("job %s failed: %s", job.id, job.error)
+            elif not more:
+                self.active.remove(job)   # slots reclaimed HERE
+                job.finish()
+        # elastic growth only once the queue is empty: queued jobs have
+        # strictly better claim on free slots than speculative clones
+        if self.elastic and self.active and not self.pending:
+            free = self.slots - self.slots_used
+            if free > 0:
+                job = min((j for j in self.active if j.sup is not None),
+                          key=lambda j: j.chains, default=None)
+                if job is not None:
+                    cap = self.elastic_cap or self.slots
+                    grow = min(free, cap - job.chains)
+                    if grow > 0:
+                        expand_fleet(job, grow)
+        return bool(self.active or self.pending)
+
+    def run(self) -> None:
+        """Drive every admitted job to completion (offline / test use; the
+        server drives :meth:`step` from its own loop)."""
+        while self.step():
+            pass

@@ -1,0 +1,82 @@
+"""Versioned response schema for the posterior service (``bn-service/v1``).
+
+Every payload the service emits — over the ``bn_serve`` HTTP endpoint, from
+the offline ``bn_query`` CLI, or persisted to a job's run directory — is a
+self-describing JSON object carrying ``schema`` + ``kind``, validated at
+WRITE time (the query layer refuses to emit a malformed response) and
+re-validated by the CI smoke (launch/serve_smoke.py). The contract mirrors
+the telemetry trace schema (telemetry/schema.py): required fields per kind,
+unknown extra keys allowed, version bumped only when a required field
+changes meaning.
+
+Response kinds
+--------------
+
+* ``job``       — admission/status answer: job id, lifecycle state
+  (queued / running / done / failed), dedup attachment count, progress.
+* ``posterior`` — the (n, n) edge-probability matrix from the telemetry
+  edge accumulator (core/metrics.edge_posterior), with its sample count.
+* ``map``       — MAP DAG: best order + per-node consistent parent-set
+  argmax (core/metrics.map_dag), plus the walk's best score.
+* ``consensus`` — thresholded edge-posterior adjacency
+  (core/metrics.consensus_graph); may contain cycles by construction.
+* ``job_list``  — all admitted jobs, each entry a full ``job`` response.
+* ``health``    — server liveness + scheduler occupancy.
+* ``error``     — structured failure (unknown job, bad request, failed job).
+* ``shutdown``  — acknowledgement of a clean stop.
+
+Every artifact response is STAMPED: job id, iterations done, convergence
+status (both R̂s + the patience vote), and the heal/reseed counts — a
+client can always tell how trustworthy an answer is and whether the fleet
+had to self-repair while producing it.
+"""
+from __future__ import annotations
+
+__all__ = ["SCHEMA", "REQUIRED", "STAMP", "validate_response"]
+
+SCHEMA = "bn-service/v1"
+
+_NUM = (int, float)
+
+# the provenance stamp carried by every per-job artifact response
+STAMP: dict[str, type | tuple] = {
+    "job_id": str, "iters_done": int, "iters": int, "converged": bool,
+    "score_rhat": _NUM, "edge_rhat": _NUM, "heals": int, "reseeds": list,
+}
+
+REQUIRED: dict[str, dict[str, type | tuple]] = {
+    "job": {**STAMP, "state": str, "deduped": bool, "attached": int,
+            "n": int, "chains": int},
+    "posterior": {**STAMP, "n": int, "edge_probs": list,
+                  "edge_samples": int},
+    "map": {**STAMP, "n": int, "adjacency": list, "score": _NUM},
+    "consensus": {**STAMP, "n": int, "adjacency": list, "threshold": _NUM},
+    "job_list": {"jobs": list},
+    "health": {"state": str, "jobs": int, "active": int, "pending": int,
+               "slots": int, "slots_used": int},
+    "error": {"error": str},
+    "shutdown": {"state": str},
+}
+
+
+def validate_response(resp) -> None:
+    """Raise ValueError unless ``resp`` is a valid ``bn-service/v1``
+    response. NaN R̂s are legal (not enough taps yet) — same contract as
+    the telemetry rows they are copied from."""
+    if not isinstance(resp, dict):
+        raise ValueError(f"service response must be a dict, got {type(resp)}")
+    if resp.get("schema") != SCHEMA:
+        raise ValueError(f"response schema {resp.get('schema')!r} != "
+                         f"{SCHEMA!r}")
+    kind = resp.get("kind")
+    if kind not in REQUIRED:
+        raise ValueError(f"unknown response kind {kind!r} "
+                         f"(expected one of {sorted(REQUIRED)})")
+    for field, typ in REQUIRED[kind].items():
+        if field not in resp:
+            raise ValueError(f"{kind} response missing required field "
+                             f"{field!r}")
+        if not isinstance(resp[field], typ):
+            raise ValueError(
+                f"{kind} response field {field!r} has type "
+                f"{type(resp[field]).__name__}, expected {typ}")

@@ -173,6 +173,15 @@ class Collector:
         self._emit(rec)
         return rec
 
+    def grow(self, extra: int) -> None:
+        """The fleet gained ``extra`` chain slots mid-run (elastic cloning).
+        Pad the cumulative-accept baseline with zeros so the new chains'
+        first segment accept-rate diff is measured from zero, like any
+        freshly started chain."""
+        if extra > 0 and self._prev_accepts is not None:
+            self._prev_accepts = np.concatenate(
+                [self._prev_accepts, np.zeros(extra, np.float64)])
+
     # ------------------------------------------------------ resume support
     def state_dict(self) -> dict:
         """The collector's tiny vote state, persisted in checkpoint metadata

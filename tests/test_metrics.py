@@ -89,3 +89,112 @@ def test_edge_posterior_degenerate_and_invalid():
         edge_posterior(np.full((2, 2), 9), 4)
     with pytest.raises(ValueError, match="outside"):
         edge_posterior(np.full((2, 2), -1), 4)
+
+
+# ---------------------------------------------------------------------------
+# map_dag / consensus_graph (ISSUE 10 satellite: the service query layer's
+# posterior artifacts), property-tested against a brute-force oracle
+# ---------------------------------------------------------------------------
+from _propcheck import given, hst, settings  # noqa: E402
+
+from repro.core.combinatorics import (candidates_to_nodes,  # noqa: E402
+                                      nodes_to_candidates, rank_parent_set,
+                                      unrank_parent_set)
+from repro.core.metrics import consensus_graph, map_dag  # noqa: E402
+from repro.core.scores import build_score_table  # noqa: E402
+from repro.preprocess.sparse import prune_table  # noqa: E402
+
+
+def _oracle_map_dag(table, s, pos):
+    """Brute force: per child, walk EVERY global PST rank in order, keep the
+    first consistent argmax (strict > — ties resolve to the lowest rank,
+    the contract map_dag and the jitted scorers share)."""
+    n = len(pos)
+    adj = np.zeros((n, n), np.int8)
+    for i in range(n):
+        best, best_parents = -np.inf, np.empty(0, np.int64)
+        for r in range(table.shape[1]):
+            parents = candidates_to_nodes(unrank_parent_set(n - 1, s, r), i)
+            if all(pos[p] < pos[i] for p in parents) and table[i, r] > best:
+                best, best_parents = table[i, r], parents
+        adj[best_parents, i] = 1
+    return adj
+
+
+def _map_score(table, s, adj):
+    """Total score of a decoded structure: sum of each child's chosen
+    parent-set entry (tie-insensitive quality measure)."""
+    n = adj.shape[0]
+    return sum(table[i, rank_parent_set(
+        n - 1, s, nodes_to_candidates(np.nonzero(adj[:, i])[0], i))]
+        for i in range(n))
+
+
+@settings(max_examples=10)
+@given(hst.integers(0, 10_000))
+def test_map_dag_matches_bruteforce_oracle(seed):
+    rng = np.random.default_rng(seed)
+    n, s = int(rng.integers(3, 7)), int(rng.integers(1, 3))
+    data = rng.integers(0, 2, size=(50, n)).astype(np.int8)
+    st = build_score_table(data, q=2, s=s)
+    pos = np.argsort(rng.permutation(n))      # pos[v] = position of node v
+    table = np.asarray(st.table)
+    want = _oracle_map_dag(table, s, pos)
+    got = map_dag(st, pos)
+    np.testing.assert_array_equal(got, want)
+    # every edge respects the order, and the decode is score-optimal
+    pr, ch = np.nonzero(got)
+    assert np.all(pos[pr] < pos[ch])
+    assert np.isclose(_map_score(table, s, got), _map_score(table, s, want))
+
+
+@settings(max_examples=10)
+@given(hst.integers(0, 10_000))
+def test_map_dag_pruned_matches_dense(seed):
+    rng = np.random.default_rng(seed)
+    n, s = int(rng.integers(3, 7)), int(rng.integers(1, 3))
+    data = rng.integers(0, 2, size=(50, n)).astype(np.int8)
+    st = build_score_table(data, q=2, s=s)
+    pos = np.argsort(rng.permutation(n))
+    # delta wide enough to keep everything: the pruned decode must agree
+    # with the dense one exactly (kept_idx is rank-ascending, so even score
+    # ties break identically)
+    sp = prune_table(st, delta=1e9)
+    np.testing.assert_array_equal(map_dag(sp, pos), map_dag(st, pos))
+    # a tight delta still yields an order-consistent DAG
+    tight = map_dag(prune_table(st, delta=1.0), pos)
+    pr, ch = np.nonzero(tight)
+    assert np.all(pos[pr] < pos[ch])
+
+
+def test_map_dag_rejects_bad_pos():
+    data = np.zeros((10, 3), np.int8)
+    st = build_score_table(data, q=2, s=1)
+    with pytest.raises(ValueError, match="flat"):
+        map_dag(st, np.zeros((2, 3), int))
+
+
+def test_consensus_graph_thresholds():
+    p = np.array([[0.0, 0.9, 0.5],
+                  [0.2, 0.0, 0.49],
+                  [1.0, 0.5, 0.0]])
+    got = consensus_graph(p, 0.5)
+    want = np.array([[0, 1, 1],
+                     [0, 0, 0],
+                     [1, 1, 0]], np.int8)
+    np.testing.assert_array_equal(got, want)
+    assert consensus_graph(p, 1.0).sum() == 1          # only the certain edge
+    # diagonal is dropped even when probabilities sneak onto it
+    q = np.eye(3) * 0.9
+    assert consensus_graph(q, 0.5).sum() == 0
+
+
+def test_consensus_graph_validation():
+    with pytest.raises(ValueError, match="square"):
+        consensus_graph(np.zeros((2, 3)), 0.5)
+    with pytest.raises(ValueError, match="outside"):
+        consensus_graph(np.full((2, 2), 1.5), 0.5)
+    with pytest.raises(ValueError, match="threshold"):
+        consensus_graph(np.zeros((2, 2)), 0.0)
+    with pytest.raises(ValueError, match="threshold"):
+        consensus_graph(np.zeros((2, 2)), 1.1)

@@ -355,3 +355,42 @@ def test_truncated_cache_entry_degrades_to_rebuild(tmp_path, caplog):
     _, i4 = build_score_table_fused(data, q=2, s=2, cache_dir=d,
                                     return_info=True)
     assert not i4["cache_hit"]
+
+
+# --------------------------------------------- concurrent writers (ISSUE 10)
+def test_checkpoint_concurrent_writers_second_wins(tmp_path, monkeypatch):
+    """Two writers racing on the SAME entry (deduped service jobs sharing a
+    cache/checkpoint dir) must each stage in a private tmp dir, and the
+    second publisher must win WHOLE — never a mixed tree. The interleave is
+    forced deterministically: writer A is paused at its publish point while
+    writer B stages and publishes, then A publishes over B."""
+    import repro.checkpoint.checkpointer as cp
+    d = str(tmp_path / "ck")
+    tree_a = (np.full(4, 1.0), np.arange(3))
+    tree_b = (np.full(4, 2.0), np.arange(3) * 10)
+    real_replace = os.replace
+    raced = []
+
+    def racing_replace(src, dst):
+        if dst.endswith("step_0000000007") and not raced:
+            raced.append(True)
+            save_checkpoint(d, 7, tree_b)     # B lands while A is mid-publish
+        return real_replace(src, dst)
+
+    monkeypatch.setattr(cp.os, "replace", racing_replace)
+    save_checkpoint(d, 7, tree_a)             # A staged first, published last
+    restored, _ = restore_checkpoint(d, tree_a)   # digests must all verify
+    np.testing.assert_array_equal(restored[0], tree_a[0])
+    np.testing.assert_array_equal(restored[1], tree_a[1])
+    assert not [f for f in os.listdir(d) if f.endswith(".tmp")]
+
+
+def test_checkpoint_resave_same_step_overwrites(tmp_path):
+    """Re-saving a step (the single-writer race with one's own past self)
+    replaces the published tree atomically instead of ENOTEMPTY-failing."""
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, 3, (np.zeros(5),))
+    save_checkpoint(d, 3, (np.ones(5),))
+    restored, _ = restore_checkpoint(d, (np.empty(5),))
+    np.testing.assert_array_equal(restored[0], np.ones(5))
+    assert latest_step(d) == 3
